@@ -1,0 +1,90 @@
+"""Aggregate dry-run JSON records into the EXPERIMENTS.md roofline tables."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(out_dir="experiments/dryrun"):
+    cells = {}
+    for path in glob.glob(os.path.join(out_dir, "*.json")):
+        with open(path) as f:
+            d = json.load(f)
+        cells[(d["mesh"], d["arch"], d["shape"])] = d
+    return cells
+
+
+def fmt_s(x):
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x*1e6:.0f}us"
+    if x < 1:
+        return f"{x*1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def table(cells, mesh="pod16x16"):
+    rows = []
+    header = ("| arch | shape | fits (GB/dev) | compute | memory | collective "
+              "| dominant | MODEL/HLO | roofline frac |")
+    rows.append(header)
+    rows.append("|" + "---|" * 9)
+    archs = sorted({a for (m, a, s) in cells if m == mesh})
+    for arch in archs:
+        for shape in ORDER:
+            d = cells.get((mesh, arch, shape))
+            if d is None:
+                continue
+            if "skipped" in d:
+                rows.append(f"| {arch} | {shape} | -- | -- | -- | -- | "
+                            f"skip: {d['skipped']} | -- | -- |")
+                continue
+            if "error" in d:
+                rows.append(f"| {arch} | {shape} | ERROR | | | | | | |")
+                continue
+            r = d["roofline"]
+            gb = d.get("memory", {}).get("peak_gb_per_device", float("nan"))
+            rows.append(
+                f"| {arch} | {shape} | {gb:.1f} | {fmt_s(r['compute_s'])} | "
+                f"{fmt_s(r['memory_s'])} | {fmt_s(r['collective_ring_s'])} | "
+                f"{r['dominant']} | {r['useful_flops_ratio']:.2f} | "
+                f"{r['roofline_fraction']:.3f} |")
+    return "\n".join(rows)
+
+
+def summary(cells):
+    lines = []
+    for mesh in ("pod16x16", "pod2x16x16"):
+        n_ok = sum(1 for (m, a, s), d in cells.items()
+                   if m == mesh and "roofline" in d)
+        n_skip = sum(1 for (m, a, s), d in cells.items()
+                     if m == mesh and "skipped" in d)
+        n_err = sum(1 for (m, a, s), d in cells.items()
+                    if m == mesh and "error" in d)
+        over = [(a, s, d["memory"]["peak_gb_per_device"])
+                for (m, a, s), d in cells.items()
+                if m == mesh and "roofline" in d
+                and d.get("memory", {}).get("peak_gb_per_device", 0) > 16]
+        lines.append(f"{mesh}: {n_ok} compiled, {n_skip} documented skips, "
+                     f"{n_err} errors; cells over 16 GB/device: "
+                     f"{over or 'none'}")
+    return "\n".join(lines)
+
+
+def main():
+    cells = load()
+    print(summary(cells))
+    print()
+    print("## single-pod (16x16) roofline")
+    print(table(cells, "pod16x16"))
+    print()
+    print("## multi-pod (2x16x16)")
+    print(table(cells, "pod2x16x16"))
+
+
+if __name__ == "__main__":
+    main()

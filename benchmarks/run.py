@@ -1,0 +1,46 @@
+"""Benchmark harness: one entry per paper table/figure plus the roofline
+report derived from the multi-pod dry-run.  Prints ``name,us_per_call,derived``
+CSV rows followed by the detailed JSON per benchmark."""
+from __future__ import annotations
+
+import json
+import time
+
+from benchmarks import paper_figures, roofline_report
+
+
+def main() -> None:
+    benches = [
+        ("ivd_token_allocation_fig3_4", paper_figures.fig3_4_token_allocation),
+        ("ive_redistribution_fig5_6", paper_figures.fig5_6_redistribution),
+        ("ivf_recompensation_fig7_8", paper_figures.fig7_8_recompensation),
+        ("ivh_frequency_fig9", paper_figures.fig9_allocation_frequency),
+        ("ivg_overhead_scaling", paper_figures.overhead_scaling),
+    ]
+    print("name,us_per_call,derived")
+    details = {}
+    for name, fn in benches:
+        t0 = time.perf_counter()
+        result = fn()
+        us = (time.perf_counter() - t0) * 1e6
+        details[name] = result
+        derived = json.dumps(result, default=float)
+        short = derived if len(derived) < 120 else derived[:117] + "..."
+        print(f"{name},{us:.0f},{short}")
+
+    print()
+    print("=== details ===")
+    print(json.dumps(details, indent=2, default=float))
+    print()
+    cells = roofline_report.load()
+    print(roofline_report.summary(cells))
+    print()
+    print("## single-pod (16x16) roofline (from dry-run artifacts)")
+    print(roofline_report.table(cells, "pod16x16"))
+    print()
+    print("## multi-pod (2x16x16)")
+    print(roofline_report.table(cells, "pod2x16x16"))
+
+
+if __name__ == "__main__":
+    main()

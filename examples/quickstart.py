@@ -1,0 +1,36 @@
+"""Quickstart: reproduce the paper's Section IV-D experiment in ~2 seconds.
+
+Four jobs with priorities 10/10/30/50% write 16 GB each through one storage
+target under three bandwidth-control policies.  AdapTBF allocates
+priority-proportionally, adapts as jobs finish, and keeps the disk at full
+utilization -- Static TBF strands bandwidth, No-BW ignores priority.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.storage import SimConfig, scenario_allocation, simulate, utilization
+
+scn = scenario_allocation()
+print(f"jobs: priorities {scn.nodes.tolist()}, 16 GB each, "
+      f"OST capacity 2 GB/s\n")
+
+for control in ("adaptbf", "static", "nobw"):
+    cfg = SimConfig(control=control)
+    res = simulate(cfg, jnp.asarray(scn.nodes), jnp.asarray(scn.issue_rate),
+                   jnp.asarray(scn.volume), jnp.asarray(scn.max_backlog))
+    served = np.asarray(res.served)
+    done = (served.cumsum(0) >= scn.volume * 0.99).argmax(0) * 0.1
+    done = [f"{d:5.1f}s" if d > 0 else "  --  " for d in done]
+    early = served[:100].sum(0)
+    util = float(np.asarray(utilization(res, cfg))[5:150].mean())
+    print(f"{control:8s}  completion={done}  "
+          f"job4:job1 early share={early[3]/max(early[0],1e-9):4.1f}x  "
+          f"busy-phase utilization={util:5.1%}")
+
+print("""
+expected: adaptbf finishes every job (priority-ordered), ~5x early share for
+the 50%-priority job, ~100% utilization; static strands tokens (low-priority
+jobs never finish inside the horizon); nobw finishes fast but ignores
+priority entirely.""")

@@ -1,0 +1,47 @@
+"""Serving example: continuous batching with AdapTBF admission control.
+
+Two request classes share the engine: ``interactive`` (priority 3) and
+``batch`` (priority 1).  Class token budgets come from the same decentralized
+allocator that guards storage bandwidth (the paper's Section III-E
+generalization): under load, interactive requests are admitted first but the
+batch class is never starved.
+
+Run:  PYTHONPATH=src python examples/serve_llm.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro import models
+from repro.configs import get_smoke_config
+from repro.serving import Request, ServingEngine
+from repro.storage import AdapTBFController
+
+cfg = get_smoke_config("phi3-mini-3.8b")
+params = models.init_params(cfg, jax.random.PRNGKey(0))
+
+controller = AdapTBFController(n_targets=1, capacity_rpc_per_s=2000,
+                               window_s=0.05)
+engine = ServingEngine(cfg, params, slots=4, max_len=128,
+                       classes={"interactive": 3.0, "batch": 1.0},
+                       controller=controller)
+
+rng = np.random.default_rng(0)
+requests = []
+for i in range(6):
+    klass = "interactive" if i % 2 == 0 else "batch"
+    req = Request(prompt=rng.integers(0, cfg.vocab, 4).tolist(),
+                  max_new_tokens=8, klass=klass)
+    requests.append(req)
+    engine.submit(req)
+
+t0 = time.perf_counter()
+done = engine.run_until_drained()
+dt = time.perf_counter() - t0
+
+print(f"served {len(done)} requests in {dt:.2f}s "
+      f"({sum(len(r.output) for r in done) / dt:.1f} tok/s aggregate)\n")
+for r in sorted(done, key=lambda r: r.id):
+    print(f"  [{r.klass:11s}] prompt={r.prompt} -> {r.output}")
+print(f"\nAdapTBF admission windows run: {controller.windows_run}")

@@ -1,0 +1,11 @@
+"""Fault-tolerant, elastic, AdapTBF-paced checkpointing."""
+from repro.checkpoint.manager import (
+    AsyncCheckpointer,
+    gc_checkpoints,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
+           "gc_checkpoints", "AsyncCheckpointer"]

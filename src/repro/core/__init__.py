@@ -1,0 +1,17 @@
+"""AdapTBF core: the paper's decentralized adaptive token borrowing allocator."""
+from repro.core.adaptbf import allocate, fleet_allocate
+from repro.core.baselines import no_bw_allocate, static_allocate
+from repro.core.remainder import integerize, rank_desc
+from repro.core.state import AllocatorState, init_fleet_state, init_state
+
+__all__ = [
+    "allocate",
+    "fleet_allocate",
+    "static_allocate",
+    "no_bw_allocate",
+    "integerize",
+    "rank_desc",
+    "AllocatorState",
+    "init_state",
+    "init_fleet_state",
+]

@@ -1,0 +1,132 @@
+"""AdapTBF: adaptive token borrowing/lending allocation (paper Section III-C).
+
+One observation window of the decentralized allocator for a single storage
+target (OST).  Three sequential steps over the *active* job set (jobs that
+issued RPCs during the window):
+
+  1. priority-based initial allocation          (Eq. 1-2)
+  2. redistribution of surplus tokens           (Eq. 3-8)
+  3. re-compensation for borrowed tokens        (Eq. 9-20)
+
+plus largest-remainder integer fairness at every distribution step
+(Eq. 21-25, see remainder.py).
+
+The function is pure and fixed-shape: `vmap` it over an OST axis for a fleet
+(`fleet_allocate`).  No operation mixes jobs across OSTs -- the paper's
+decentralization property is structural here.
+
+Deviations from the paper (documented in DESIGN.md section 2):
+  * u_x uses max(alpha_prev, 1) in the denominator and is capped at u_max, to
+    define utilization for newly-active jobs (alpha^{t-1} = 0).
+  * the reclaim amount is additionally clamped to alpha_RD so allocations stay
+    non-negative; outstanding debt is repaid over subsequent windows.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.remainder import integerize, passthrough
+from repro.core.state import AllocatorState
+
+_EPS = 1e-12
+
+
+@functools.partial(jax.jit, static_argnames=("u_max", "integer_tokens"))
+def allocate(
+    state: AllocatorState,
+    demand: jnp.ndarray,
+    nodes: jnp.ndarray,
+    capacity: jnp.ndarray,
+    *,
+    u_max: float = 64.0,
+    integer_tokens: bool = True,
+) -> Tuple[AllocatorState, jnp.ndarray]:
+    """Run one AdapTBF observation-window allocation.
+
+    Args:
+      state:    AllocatorState with [J] arrays (record, remainder, alloc_prev).
+      demand:   [J] observed I/O demand d_x^t = RPCs issued during the window.
+      nodes:    [J] compute nodes n_x^t allocated to each job.
+      capacity: scalar window token budget T_i * dt.
+      u_max:    utilization-score cap (numerical guard, DESIGN.md deviation 1).
+      integer_tokens: integerize with remainder fairness (Eq. 21-25) when True.
+
+    Returns:
+      (new_state, alloc): alloc[J] is the token budget for the next window
+      (0 for inactive jobs -- their RPCs fall through to the fallback queue).
+    """
+    dist = integerize if integer_tokens else passthrough
+    dtype = state.record.dtype
+    demand = demand.astype(dtype)
+    nodes = nodes.astype(dtype)
+    capacity = jnp.asarray(capacity, dtype)
+
+    active = demand > 0
+    any_active = jnp.any(active)
+
+    # ---- Step 1: priority-based initial allocation (Eq. 1-2) ----------------
+    n_act = jnp.where(active, nodes, 0.0)
+    p = n_act / jnp.maximum(jnp.sum(n_act), _EPS)          # Eq. 1
+    budget1 = jnp.where(any_active, capacity, 0.0)
+    alpha_raw = budget1 * p                                 # Eq. 2
+    alpha1, rem = dist(alpha_raw, state.remainder, budget1, active)
+
+    # ---- Step 2: redistribution of surplus tokens (Eq. 3-8) -----------------
+    u = jnp.minimum(demand / jnp.maximum(state.alloc_prev, 1.0), u_max)  # Eq. 3
+    u = jnp.where(active, u, 0.0)
+    surplus = jnp.where(active, jnp.maximum(alpha1 - demand, 0.0), 0.0)  # Eq. 4
+    t_s = jnp.sum(surplus)                                               # Eq. 5
+    df = jnp.where(u > 1.0, u + u * p, u * p)                            # Eq. 6
+    df = jnp.where(active, df, 0.0)
+    share = df / jnp.maximum(jnp.sum(df), _EPS)
+    add_rd, rem = dist(share * t_s, rem, t_s, active)
+    alpha_rd = alpha1 - surplus + add_rd                                 # Eq. 7
+    r_rd = state.record + surplus - add_rd                               # Eq. 8
+
+    # ---- Step 3: re-compensation for borrowed tokens (Eq. 9-20) -------------
+    j_plus = active & (state.record > 0) & (r_rd > 0)                    # Eq. 9
+    j_minus = active & (state.record < 0) & (r_rd < 0)                   # Eq. 10
+    u_future = demand / jnp.maximum(alpha_rd, 1.0)                       # Eq. 11-12
+    c_terms = p * (jnp.maximum(1.0, u) + jnp.maximum(0.0, 1.0 - u_future)) / 2.0
+    c = jnp.sum(jnp.where(j_plus, c_terms, 0.0))                         # Eq. 13
+    reclaim_raw = jnp.minimum(jnp.abs(state.record), jnp.abs(c * alpha_rd))
+    reclaim_raw = jnp.minimum(reclaim_raw, alpha_rd)   # non-negativity guard
+    if integer_tokens:
+        reclaim_raw = jnp.floor(reclaim_raw)
+    reclaim = jnp.where(j_minus, reclaim_raw, 0.0)                       # Eq. 14
+    t_r = jnp.sum(reclaim)                                               # Eq. 17
+    df_plus = jnp.where(j_plus, df, 0.0)                                 # Eq. 18 (RF = DF)
+    share_plus = df_plus / jnp.maximum(jnp.sum(df_plus), _EPS)
+    add_rc, rem = dist(share_plus * t_r, rem, t_r, j_plus)
+    alpha_rc = alpha_rd - reclaim + add_rc                               # Eq. 15/19
+    r_rc = r_rd + reclaim - add_rc                                       # Eq. 16/20
+
+    alloc = jnp.where(active, alpha_rc, 0.0)
+    new_state = AllocatorState(record=r_rc, remainder=rem, alloc_prev=alloc)
+    return new_state, alloc
+
+
+def fleet_allocate(
+    state: AllocatorState,
+    demand: jnp.ndarray,
+    nodes: jnp.ndarray,
+    capacity: jnp.ndarray,
+    *,
+    u_max: float = 64.0,
+    integer_tokens: bool = True,
+) -> Tuple[AllocatorState, jnp.ndarray]:
+    """Decentralized fleet allocation: vmap of `allocate` over the OST axis.
+
+    state fields, demand: [n_ost, n_jobs]; nodes: [n_jobs] or [n_ost, n_jobs];
+    capacity: scalar or [n_ost].
+    """
+    n_ost = demand.shape[0]
+    if nodes.ndim == 1:
+        nodes = jnp.broadcast_to(nodes, demand.shape)
+    capacity = jnp.broadcast_to(jnp.asarray(capacity), (n_ost,))
+    fn = functools.partial(allocate, u_max=u_max, integer_tokens=integer_tokens)
+    return jax.vmap(fn)(state, demand, nodes, capacity)

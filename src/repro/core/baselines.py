@@ -1,0 +1,23 @@
+"""Bandwidth-control baselines from the paper's evaluation (Section IV-C).
+
+* Static BW: static TBF rules sized by each job's share of the *total* system
+  resources (not just active jobs); never adapts.
+* No BW:     Lustre default -- no token gating at all; the simulator serves
+  backlog-proportionally (FCFS over shared I/O threads).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def static_allocate(nodes: jnp.ndarray, capacity: jnp.ndarray) -> jnp.ndarray:
+    """Static TBF rates: capacity * n_x / sum_all(n).  [J] tokens per window."""
+    nodes = jnp.asarray(nodes, jnp.float32)
+    share = nodes / jnp.maximum(jnp.sum(nodes), 1e-12)
+    return jnp.asarray(capacity, jnp.float32) * share
+
+
+def no_bw_allocate(demand: jnp.ndarray, capacity: jnp.ndarray) -> jnp.ndarray:
+    """No-BW 'allocation': effectively unlimited tokens per job (the simulator
+    then arbitrates by backlog share, see storage/simulator.py)."""
+    return jnp.full(demand.shape, jnp.asarray(capacity, jnp.float32))

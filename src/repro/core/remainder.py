@@ -1,0 +1,74 @@
+"""Integer token distribution with remainder accumulation (paper Eq. 21-25).
+
+Each allocation step (priority allocation, surplus redistribution, reclaim
+allocation) must hand out an *integer* number of tokens whose masked total
+exactly equals the step's budget.  Fractional remainders are carried per job
+across steps and windows; flooring errors are corrected largest-remainder-first
+(+1 on leftover, -1 on excess), exactly as Section III-C.4 describes.
+
+All functions are jit/vmap-safe: fixed shapes, no data-dependent control flow.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rank_desc(key: jnp.ndarray) -> jnp.ndarray:
+    """Dense rank (0 = largest key). Ties broken by index (stable argsort)."""
+    order = jnp.argsort(-key, stable=True)
+    return jnp.zeros_like(order).at[order].set(jnp.arange(key.shape[0]))
+
+
+def integerize(
+    raw: jnp.ndarray,
+    remainder: jnp.ndarray,
+    budget: jnp.ndarray,
+    mask: jnp.ndarray,
+):
+    """Floor ``raw + remainder`` over ``mask``-ed jobs and correct so that the
+    masked total equals ``budget`` exactly.
+
+    Args:
+      raw:       [J] fractional token allocation for this step (0 where unmasked).
+      remainder: [J] carried remainders rho (updated only for masked jobs).
+      budget:    scalar integral total this step must distribute.
+      mask:      [J] bool, jobs participating in this step.
+
+    Returns:
+      (alloc, new_remainder): integer-valued float allocations summing to
+      ``budget`` over the mask, and the updated remainder carry.
+    """
+    raw = jnp.where(mask, raw, 0.0)
+    x = jnp.where(mask, raw + remainder, 0.0)
+    # A job may carry a *negative* remainder (it was bumped +1 by a previous
+    # largest-remainder correction, Eq. 24).  Allocations are clamped at zero;
+    # the negative carry persists until the job earns it back.
+    floored = jnp.maximum(jnp.floor(x), 0.0)
+    rem = jnp.where(mask, x - floored, 0.0)
+
+    delta = jnp.round(budget - jnp.sum(floored))  # integral correction count
+
+    neg_inf = jnp.asarray(-jnp.inf, raw.dtype)
+    n = raw.shape[0]
+    # leftover: +1 to the largest-remainder masked jobs first (multi-round so
+    # corrections larger than the job count still conserve the budget)
+    rank_up = rank_desc(jnp.where(mask, rem, neg_inf))
+    bump_up = jnp.zeros_like(raw)
+    for r in range(3):
+        bump_up = bump_up + jnp.where(mask & (rank_up < delta - r * n), 1.0, 0.0)
+    # excess: -1 from the largest-remainder masked jobs that have >= 1 token
+    rank_dn = rank_desc(jnp.where(mask & (floored >= 1.0), rem, neg_inf))
+    bump_dn = jnp.where(mask & (floored >= 1.0) & (rank_dn < -delta), 1.0, 0.0)
+
+    applied = jnp.where(delta > 0, bump_up, jnp.where(delta < 0, -bump_dn, 0.0))
+    alloc = floored + applied
+    new_remainder = jnp.where(mask, rem - applied, remainder)
+    return alloc, new_remainder
+
+
+def passthrough(raw, remainder, budget, mask):
+    """Float (non-integerizing) variant with the same signature -- used for
+    continuous-budget controllers (e.g. serving tokens/sec) and for
+    differentiable simulation."""
+    del budget
+    return jnp.where(mask, raw, 0.0), remainder

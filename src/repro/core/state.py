@@ -1,0 +1,34 @@
+"""Per-OST allocator state (paper Table I: records r_x, remainders rho_x, alpha^{t-1}).
+
+The state is a flat pytree of [n_jobs] arrays so a fleet of OSTs is simply the
+vmapped [n_ost, n_jobs] version -- decentralization is preserved because no
+operation in the allocator ever mixes rows.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+
+class AllocatorState(NamedTuple):
+    """State carried across observation windows for one storage target.
+
+    record:     net tokens lent (+) / borrowed (-) per job  (r_x, Eq. 8/16/20)
+    remainder:  fractional token carry per job              (rho_x, Eq. 21-25)
+    alloc_prev: final allocation of the previous window     (alpha_x^{t-1}, Eq. 3)
+    """
+
+    record: jnp.ndarray
+    remainder: jnp.ndarray
+    alloc_prev: jnp.ndarray
+
+
+def init_state(n_jobs: int, dtype=jnp.float32) -> AllocatorState:
+    z = jnp.zeros((n_jobs,), dtype)
+    return AllocatorState(record=z, remainder=z, alloc_prev=z)
+
+
+def init_fleet_state(n_ost: int, n_jobs: int, dtype=jnp.float32) -> AllocatorState:
+    z = jnp.zeros((n_ost, n_jobs), dtype)
+    return AllocatorState(record=z, remainder=z, alloc_prev=z)

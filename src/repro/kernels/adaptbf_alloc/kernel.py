@@ -1,0 +1,138 @@
+"""Pallas TPU kernel: fleet-scale AdapTBF token allocation.
+
+One grid step allocates for a block of OSTs (rows) x all jobs (lanes), the
+whole three-step algorithm (priority -> redistribution -> re-compensation,
+paper Section III-C) running in VMEM on the VPU.  The decentralization
+property is structural: every op is row-independent.
+
+The largest-remainder ranking is computed with an O(J^2) comparison matrix
+(tie-break by job index, identical to the stable-argsort rank in
+core/remainder.py) -- sort-free, vector-unit friendly, and exact.
+
+Block sizing: BLOCK_O x J with J padded to a lane multiple (128).  VMEM
+footprint ~ (10 arrays x BLOCK_O x J + BLOCK_O x J^2 rank matrix) x 4B;
+BLOCK_O=8, J=1024 -> ~34 MB exceeds VMEM, so ops.py drops BLOCK_O as J grows.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_EPS = 1e-12
+
+
+def _rank_desc(key):
+    """[O, J] -> dense rank by key desc, ties by index asc (stable)."""
+    o, j = key.shape
+    idx = jax.lax.broadcasted_iota(jnp.int32, (1, j, 1), 1)   # i
+    jdx = jax.lax.broadcasted_iota(jnp.int32, (1, 1, j), 2)   # j
+    ki = key[:, :, None]
+    kj = key[:, None, :]
+    cmp = (kj > ki) | ((kj == ki) & (jdx < idx))
+    return cmp.sum(axis=-1).astype(key.dtype)                 # [O, J]
+
+
+def _integerize(raw, rem, budget, mask):
+    """2-D version of core/remainder.integerize.  budget: [O, 1]."""
+    raw = jnp.where(mask, raw, 0.0)
+    x = jnp.where(mask, raw + rem, 0.0)
+    floored = jnp.maximum(jnp.floor(x), 0.0)
+    frac = jnp.where(mask, x - floored, 0.0)
+    delta = jnp.round(budget - jnp.sum(floored, axis=-1, keepdims=True))
+
+    neg_inf = jnp.float32(-jnp.inf)
+    n = raw.shape[-1]
+    rank_up = _rank_desc(jnp.where(mask, frac, neg_inf))
+    bump_up = jnp.zeros_like(raw)
+    for r in range(3):
+        bump_up = bump_up + jnp.where(mask & (rank_up < delta - r * n), 1.0, 0.0)
+    elig = mask & (floored >= 1.0)
+    rank_dn = _rank_desc(jnp.where(elig, frac, neg_inf))
+    bump_dn = jnp.where(elig & (rank_dn < -delta), 1.0, 0.0)
+
+    applied = jnp.where(delta > 0, bump_up, jnp.where(delta < 0, -bump_dn, 0.0))
+    return floored + applied, jnp.where(mask, frac - applied, rem)
+
+
+def _alloc_block(demand, nodes, record, remainder, alloc_prev, capacity,
+                 u_max: float):
+    """The full three-step window allocation on a [O, J] block."""
+    active = demand > 0
+    any_active = jnp.any(active, axis=-1, keepdims=True)
+
+    # step 1: priority-based initial allocation (Eq. 1-2)
+    n_act = jnp.where(active, nodes, 0.0)
+    p = n_act / jnp.maximum(jnp.sum(n_act, axis=-1, keepdims=True), _EPS)
+    budget1 = jnp.where(any_active, capacity, 0.0)
+    alpha1, rem = _integerize(budget1 * p, remainder, budget1, active)
+
+    # step 2: surplus redistribution (Eq. 3-8)
+    u = jnp.minimum(demand / jnp.maximum(alloc_prev, 1.0), u_max)
+    u = jnp.where(active, u, 0.0)
+    surplus = jnp.where(active, jnp.maximum(alpha1 - demand, 0.0), 0.0)
+    t_s = jnp.sum(surplus, axis=-1, keepdims=True)
+    df = jnp.where(u > 1.0, u + u * p, u * p)
+    df = jnp.where(active, df, 0.0)
+    share = df / jnp.maximum(jnp.sum(df, axis=-1, keepdims=True), _EPS)
+    add_rd, rem = _integerize(share * t_s, rem, t_s, active)
+    alpha_rd = alpha1 - surplus + add_rd
+    r_rd = record + surplus - add_rd
+
+    # step 3: re-compensation (Eq. 9-20)
+    j_plus = active & (record > 0) & (r_rd > 0)
+    j_minus = active & (record < 0) & (r_rd < 0)
+    u_future = demand / jnp.maximum(alpha_rd, 1.0)
+    c_terms = p * (jnp.maximum(1.0, u) + jnp.maximum(0.0, 1.0 - u_future)) / 2.0
+    c = jnp.sum(jnp.where(j_plus, c_terms, 0.0), axis=-1, keepdims=True)
+    reclaim = jnp.minimum(jnp.abs(record), jnp.abs(c * alpha_rd))
+    reclaim = jnp.floor(jnp.minimum(reclaim, alpha_rd))
+    reclaim = jnp.where(j_minus, reclaim, 0.0)
+    t_r = jnp.sum(reclaim, axis=-1, keepdims=True)
+    df_plus = jnp.where(j_plus, df, 0.0)
+    share_p = df_plus / jnp.maximum(jnp.sum(df_plus, axis=-1, keepdims=True), _EPS)
+    add_rc, rem = _integerize(share_p * t_r, rem, t_r, j_plus)
+    alpha_rc = alpha_rd - reclaim + add_rc
+    r_rc = r_rd + reclaim - add_rc
+
+    alloc = jnp.where(active, alpha_rc, 0.0)
+    return alloc, r_rc, rem
+
+
+def _kernel(demand_ref, nodes_ref, record_ref, rem_ref, prev_ref, cap_ref,
+            alloc_ref, new_rec_ref, new_rem_ref, *, u_max: float):
+    alloc, rec, rem = _alloc_block(
+        demand_ref[...], nodes_ref[...], record_ref[...], rem_ref[...],
+        prev_ref[...], cap_ref[...], u_max)
+    alloc_ref[...] = alloc
+    new_rec_ref[...] = rec
+    new_rem_ref[...] = rem
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("u_max", "block_o", "interpret"))
+def fleet_alloc_pallas(demand, nodes, record, remainder, alloc_prev,
+                       capacity, *, u_max: float = 64.0, block_o: int = 8,
+                       interpret: bool = False):
+    """[O, J] fleet allocation.  capacity: [O].  J should be a multiple of
+    128 and O a multiple of block_o (ops.py pads).  Returns
+    (alloc, new_record, new_remainder)."""
+    o, j = demand.shape
+    cap2 = capacity.reshape(o, 1).astype(jnp.float32)
+    grid = (o // block_o,)
+    row_spec = pl.BlockSpec((block_o, j), lambda i: (i, 0))
+    cap_spec = pl.BlockSpec((block_o, 1), lambda i: (i, 0))
+    out_shape = [jax.ShapeDtypeStruct((o, j), jnp.float32)] * 3
+    fn = pl.pallas_call(
+        functools.partial(_kernel, u_max=u_max),
+        grid=grid,
+        in_specs=[row_spec] * 5 + [cap_spec],
+        out_specs=[row_spec] * 3,
+        out_shape=out_shape,
+        interpret=interpret,
+    )
+    args = [x.astype(jnp.float32) for x in
+            (demand, nodes, record, remainder, alloc_prev)] + [cap2]
+    return tuple(fn(*args))

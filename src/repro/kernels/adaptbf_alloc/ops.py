@@ -1,0 +1,55 @@
+"""Dispatching wrapper for fleet-scale AdapTBF allocation: pads (O, J) to
+hardware-friendly multiples, picks a VMEM-safe OST block, and routes to the
+Pallas kernel (TPU, or interpret mode when forced) or the vmapped core
+allocator."""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.adaptbf_alloc import ref
+from repro.kernels.adaptbf_alloc.kernel import fleet_alloc_pallas
+
+_FORCE_REF = os.environ.get("REPRO_FORCE_REF_KERNELS", "0") == "1"
+
+
+def _on_tpu() -> bool:
+    return (not _FORCE_REF) and jax.default_backend() == "tpu"
+
+
+def _pad_to(x, m, axis, value=0.0):
+    pad = (-x.shape[axis]) % m
+    if pad == 0:
+        return x
+    cfg = [(0, 0)] * x.ndim
+    cfg[axis] = (0, pad)
+    return jnp.pad(x, cfg, constant_values=value)
+
+
+def _block_o(j: int) -> int:
+    # keep the [block_o, J, J] rank matrix under ~8 MB of VMEM (f32)
+    for b in (8, 4, 2, 1):
+        if b * j * j * 4 <= 8 * 2**20:
+            return b
+    return 1
+
+
+def fleet_alloc(demand, nodes, record, remainder, alloc_prev, capacity,
+                *, u_max: float = 64.0, interpret: bool = None):
+    """[O, J] arrays + [O] capacity -> (alloc, new_record, new_remainder)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    o, j = demand.shape
+    jp = max(128, j + (-j) % 128)
+    bo = _block_o(jp)
+    args = [_pad_to(_pad_to(x, jp, 1), bo, 0)
+            for x in (demand, nodes, record, remainder, alloc_prev)]
+    cap = _pad_to(capacity.reshape(-1), bo, 0)
+    alloc, rec, rem = fleet_alloc_pallas(
+        *args, cap, u_max=u_max, block_o=bo, interpret=interpret)
+    return alloc[:o, :j], rec[:o, :j], rem[:o, :j]
+
+
+fleet_alloc_ref = ref.fleet_alloc_ref

@@ -1,0 +1,18 @@
+"""Oracle for the fleet-scale AdapTBF allocation kernel: the core allocator
+itself (vmapped over OSTs).  The Pallas kernel must match this exactly
+(integer tokens, identical tie-breaking)."""
+from __future__ import annotations
+
+from repro.core.adaptbf import fleet_allocate
+from repro.core.state import AllocatorState
+
+
+def fleet_alloc_ref(demand, nodes, record, remainder, alloc_prev, capacity,
+                    *, u_max: float = 64.0):
+    """demand/nodes/record/remainder/alloc_prev: [O, J]; capacity: [O].
+    Returns (alloc, new_record, new_remainder, new_alloc_prev)."""
+    state = AllocatorState(record=record, remainder=remainder,
+                           alloc_prev=alloc_prev)
+    new_state, alloc = fleet_allocate(state, demand, nodes, capacity,
+                                      u_max=u_max, integer_tokens=True)
+    return alloc, new_state.record, new_state.remainder, new_state.alloc_prev

@@ -1,0 +1,33 @@
+"""Dispatching wrapper: Pallas flash-attention kernel on TPU backends, the
+numerically-identical jnp oracle elsewhere (CPU tests, dry-run lowering)."""
+from __future__ import annotations
+
+import os
+
+import jax
+
+from repro.kernels.attention import ref
+
+_FORCE_REF = os.environ.get("REPRO_FORCE_REF_KERNELS", "0") == "1"
+
+
+def _on_tpu() -> bool:
+    return (not _FORCE_REF) and jax.default_backend() == "tpu"
+
+
+def attention(q, k, v, *, causal: bool = True):
+    """GQA attention.  q [B,S,Hq,D]; k/v [B,T,Hkv,D]."""
+    if _on_tpu():
+        from repro.kernels.attention import kernel
+
+        return kernel.flash_attention(q, k, v, causal=causal)
+    return ref.mha(q, k, v, causal=causal)
+
+
+def decode_attention(q, k_cache, v_cache, length):
+    """Single-token attention over a KV cache."""
+    if _on_tpu():
+        from repro.kernels.attention import kernel
+
+        return kernel.flash_decode(q, k_cache, v_cache, length)
+    return ref.decode_attention(q, k_cache, v_cache, length)

@@ -1,0 +1,147 @@
+"""Pure-jnp oracle for the attention kernels: flash attention with a
+hand-written recompute backward (custom_vjp).
+
+Why custom_vjp even for the XLA path: differentiating through the
+online-softmax scan makes XLA stack the per-block probability matrices as
+scan residuals ([n_blocks, B, S, H, block] f32 -- gigabytes at 4k, absurd at
+32k).  Flash attention's defining trick is recomputing them blockwise in the
+backward pass; we implement exactly that, so the XLA path has the same memory
+behaviour the Pallas kernel has on TPU.
+
+Head convention: the model broadcasts KV heads to query heads before calling
+(GQA grouping lives in the Pallas kernel where it saves real bandwidth), so
+here q/k/v all carry H = n_q_heads:
+  q: [B, S, H, D]   k/v: [B, T, H, D]
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _blocks(x, block, axis=1):
+    b, t = x.shape[0], x.shape[axis]
+    n = (t + block - 1) // block
+    pad = n * block - t
+    if pad:
+        cfg = [(0, 0)] * x.ndim
+        cfg[axis] = (0, pad)
+        x = jnp.pad(x, cfg)
+    shape = x.shape[:axis] + (n, block) + x.shape[axis + 1 :]
+    return x.reshape(shape), n, pad
+
+
+def _fwd(q, k, v, causal: bool, block_kv: int):
+    b, s, h, d = q.shape
+    t = k.shape[1]
+    scale = d ** -0.5
+    kb, n, _ = _blocks(k, block_kv)       # [B,n,Bk,H,D]
+    vb, _, _ = _blocks(v, block_kv)
+    q_pos = jnp.arange(s)[:, None]
+
+    def body(carry, blk):
+        m, l, acc = carry
+        k_i, v_i, start = blk
+        logits = jnp.einsum("bshd,bthd->bsht", q, k_i) * scale
+        kv_pos = start + jnp.arange(block_kv)[None, :]
+        valid = kv_pos < t
+        if causal:
+            valid = valid & (kv_pos <= q_pos)
+        logits = jnp.where(valid[None, :, None, :], logits, NEG_INF)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bsht,bthd->bshd", p.astype(v_i.dtype), v_i)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, s, h), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, s, h), jnp.float32)
+    acc0 = jnp.zeros((b, s, h, d), jnp.float32)
+    starts = jnp.arange(n) * block_kv
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, acc0),
+        (kb.swapaxes(0, 1), vb.swapaxes(0, 1), starts))
+    l_safe = jnp.maximum(l, 1e-30)
+    o = (acc / l_safe[..., None]).astype(q.dtype)
+    lse = m + jnp.log(l_safe)             # [B,S,H] f32
+    return o, lse
+
+
+def _bwd_impl(q, k, v, o, lse, do, causal: bool, block_kv: int):
+    b, s, h, d = q.shape
+    t = k.shape[1]
+    scale = d ** -0.5
+    kb, n, pad = _blocks(k, block_kv)
+    vb, _, _ = _blocks(v, block_kv)
+    q_pos = jnp.arange(s)[:, None]
+    delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), axis=-1)
+
+    def body(dq, blk):
+        k_i, v_i, start = blk
+        logits = jnp.einsum("bshd,bthd->bsht", q, k_i) * scale
+        kv_pos = start + jnp.arange(block_kv)[None, :]
+        valid = kv_pos < t
+        if causal:
+            valid = valid & (kv_pos <= q_pos)
+        logits = jnp.where(valid[None, :, None, :], logits, NEG_INF)
+        p = jnp.exp(logits - lse[..., None])             # [B,S,H,Bk] f32
+        dv_i = jnp.einsum("bsht,bshd->bthd", p.astype(do.dtype), do)
+        dp = jnp.einsum("bshd,bthd->bsht", do, v_i).astype(jnp.float32)
+        ds = p * (dp - delta[..., None]) * scale         # [B,S,H,Bk]
+        ds = ds.astype(q.dtype)
+        dq = dq + jnp.einsum("bsht,bthd->bshd", ds, k_i)
+        dk_i = jnp.einsum("bsht,bshd->bthd", ds, q)
+        return dq, (dk_i, dv_i)
+
+    starts = jnp.arange(n) * block_kv
+    dq0 = jnp.zeros_like(q)
+    dq, (dkb, dvb) = jax.lax.scan(
+        body, dq0, (kb.swapaxes(0, 1), vb.swapaxes(0, 1), starts))
+    dk = dkb.swapaxes(0, 1).reshape(b, n * block_kv, h, d)[:, :t]
+    dv = dvb.swapaxes(0, 1).reshape(b, n * block_kv, h, d)[:, :t]
+    return dq, dk, dv
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _mha(q, k, v, causal: bool, block_kv: int):
+    return _fwd(q, k, v, causal, block_kv)[0]
+
+
+def _mha_fwd(q, k, v, causal, block_kv):
+    o, lse = _fwd(q, k, v, causal, block_kv)
+    return o, (q, k, v, o, lse)
+
+
+def _mha_bwd(causal, block_kv, res, do):
+    q, k, v, o, lse = res
+    return _bwd_impl(q, k, v, o, lse, do, causal, block_kv)
+
+
+_mha.defvjp(_mha_fwd, _mha_bwd)
+
+
+def mha(q, k, v, *, causal: bool = True, block_kv: int = 1024):
+    """Flash attention (jnp oracle).  q [B,S,H,D]; k/v [B,T,H,D]."""
+    assert q.shape[2] == k.shape[2], "broadcast KV to query heads first"
+    block_kv = min(block_kv, max(k.shape[1], 128))
+    return _mha(q, k, v, causal, block_kv)
+
+
+@jax.jit
+def decode_attention(q, k_cache, v_cache, length):
+    """One-token attention: q [B,1,H,D] over cache [B,T,H,D], positions
+    >= ``length`` masked out."""
+    b, _, h, d = q.shape
+    t = k_cache.shape[1]
+    logits = jnp.einsum("bshd,bthd->bsht", q, k_cache) * (d ** -0.5)
+    valid = jnp.arange(t)[None, :] < length[:, None]  # [B,T]
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+    w = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    out = jnp.einsum("bsht,bthd->bshd", w.astype(v_cache.dtype), v_cache)
+    return out.astype(q.dtype)

@@ -1,0 +1,33 @@
+"""Dispatching wrapper for the Mamba-2 SSD kernels: Pallas on TPU, jnp oracle
+elsewhere (CPU tests, dry-run lowering)."""
+from __future__ import annotations
+
+import os
+
+import jax
+
+from repro.kernels.ssd import ref
+
+_FORCE_REF = os.environ.get("REPRO_FORCE_REF_KERNELS", "0") == "1"
+
+
+def _on_tpu() -> bool:
+    return (not _FORCE_REF) and jax.default_backend() == "tpu"
+
+
+def ssd(x, dt, a, B, C, d_skip=None, initial_state=None, chunk: int = 64):
+    """Chunked SSD scan (training / prefill)."""
+    if _on_tpu():
+        from repro.kernels.ssd import kernel
+
+        return kernel.ssd_pallas(
+            x, dt, a, B, C, d_skip=d_skip, initial_state=initial_state, chunk=chunk
+        )
+    return ref.ssd_chunked(
+        x, dt, a, B, C, d_skip=d_skip, initial_state=initial_state, chunk=chunk
+    )
+
+
+def ssd_update(state, x_t, dt_t, a, B_t, C_t, d_skip=None):
+    """O(1) single-token decode update (pure jnp -- already optimal layout)."""
+    return ref.ssd_update(state, x_t, dt_t, a, B_t, C_t, d_skip=d_skip)

@@ -1,0 +1,127 @@
+"""Pure-jnp oracle for the Mamba-2 SSD (state-space duality) kernels
+[arXiv:2405.21060].
+
+Chunked formulation: within a chunk of length Q the recurrence is expanded as
+a masked quadratic form (the "duality" with attention); across chunks the
+state h [B,H,P,N] is carried by a short scan.  Single B/C group (n_groups=1).
+
+  x:  [B, S, H, P]   (P = head dim)
+  dt: [B, S, H]      (> 0, already softplus'ed + bias)
+  a:  [H]            (< 0, = -exp(a_log))
+  B, C: [B, S, N]    (N = state dim)
+
+``ssd_chunked`` is the training/prefill path (differentiable); ``ssd_update``
+is the O(1) single-token decode path.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_chunked(
+    x: jnp.ndarray,
+    dt: jnp.ndarray,
+    a: jnp.ndarray,
+    B: jnp.ndarray,
+    C: jnp.ndarray,
+    d_skip: Optional[jnp.ndarray] = None,
+    initial_state: Optional[jnp.ndarray] = None,
+    chunk: int = 64,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (y [B,S,H,P], final_state [B,H,P,N])."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    orig_s = s
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))   # dt=0 -> no-op steps
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+        s = s + pad
+    nc = s // chunk
+
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h).astype(jnp.float32)
+    Bc = B.reshape(b, nc, chunk, n)
+    Cc = C.reshape(b, nc, chunk, n)
+
+    dA = dtc * a.astype(jnp.float32)                 # [b,nc,q,h], <= 0
+    cum = jnp.cumsum(dA, axis=2)                     # running within-chunk decay
+    seg_total = cum[:, :, -1, :]                     # [b,nc,h]
+    xw = xc * dtc[..., None].astype(xc.dtype)        # dt-weighted inputs
+
+    # ---- intra-chunk (quadratic, masked) ------------------------------------
+    scores = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)   # [b,nc,q,q]
+    # exponent is <= 0 on the valid (lower) triangle; clamp so the masked
+    # upper triangle cannot overflow to inf (inf * 0 -> NaN in the vjp)
+    decay = jnp.exp(jnp.minimum(
+        cum[:, :, :, None, :] - cum[:, :, None, :, :], 0.0))  # [b,nc,q,q,h]
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    w = jnp.where(tri[None, None, :, :, None], scores[..., None] * decay, 0.0)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", w.astype(xc.dtype), xw)
+
+    # ---- per-chunk end states ------------------------------------------------
+    state_decay = jnp.exp(seg_total[:, :, None, :] - cum)           # [b,nc,q,h]
+    h_chunk = jnp.einsum(
+        "bcjn,bcjh,bcjhp->bchpn", Bc, state_decay.astype(xc.dtype), xw
+    )                                                # [b,nc,h,p,n]
+
+    # ---- inter-chunk scan ----------------------------------------------------
+    gamma = jnp.exp(seg_total)                       # [b,nc,h]
+
+    def body(h_prev, inp):
+        g, hc, c_blk, cum_blk = inp                  # [b,h],[b,h,p,n],[b,q,n],[b,q,h]
+        y_in = jnp.einsum(
+            "bqn,bqh,bhpn->bqhp", c_blk, jnp.exp(cum_blk).astype(xc.dtype), h_prev
+        )
+        h_new = h_prev * g[:, :, None, None].astype(h_prev.dtype) + hc
+        return h_new, y_in
+
+    if initial_state is None:
+        h0 = jnp.zeros((b, h, p, n), xc.dtype)
+    else:
+        h0 = initial_state.astype(xc.dtype)
+    h_final, y_inter = jax.lax.scan(
+        body,
+        h0,
+        (
+            gamma.swapaxes(0, 1),
+            h_chunk.swapaxes(0, 1),
+            Cc.swapaxes(0, 1),
+            cum.swapaxes(0, 1),
+        ),
+    )
+    y = y_intra + y_inter.swapaxes(0, 1)
+    if d_skip is not None:
+        y = y + d_skip[None, None, None, :, None].astype(xc.dtype) * xc
+    y = y.reshape(b, s, h, p)[:, :orig_s]
+    return y.astype(x.dtype), h_final
+
+
+@jax.jit
+def ssd_update(
+    state: jnp.ndarray,
+    x_t: jnp.ndarray,
+    dt_t: jnp.ndarray,
+    a: jnp.ndarray,
+    B_t: jnp.ndarray,
+    C_t: jnp.ndarray,
+    d_skip: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One decode step.  state [B,H,P,N], x_t [B,H,P], dt_t [B,H], B_t/C_t [B,N].
+    Returns (new_state, y [B,H,P])."""
+    dt_t = dt_t.astype(jnp.float32)
+    g = jnp.exp(dt_t * a.astype(jnp.float32))        # [B,H]
+    state = state * g[..., None, None].astype(state.dtype) + jnp.einsum(
+        "bn,bh,bhp->bhpn", B_t, dt_t.astype(x_t.dtype), x_t
+    )
+    y = jnp.einsum("bn,bhpn->bhp", C_t, state)
+    if d_skip is not None:
+        y = y + d_skip[None, :, None].astype(y.dtype) * x_t
+    return state, y

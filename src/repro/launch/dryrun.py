@@ -1,0 +1,221 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax import: jax locks the device
+# count on first init, and the multi-pod dry-run needs 512 host devices.
+
+import argparse          # noqa: E402
+import dataclasses       # noqa: E402
+import json              # noqa: E402
+import subprocess        # noqa: E402
+import sys               # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import ARCHS, get_config               # noqa: E402
+from repro.configs.shapes import SHAPES, skip_reason      # noqa: E402
+from repro.launch import roofline as rl                   # noqa: E402
+from repro.launch import specs, steps                     # noqa: E402
+from repro.launch.mesh import make_production_mesh        # noqa: E402
+
+# per-arch train_4k overrides (activation-memory fit; microbatches chosen so
+# per-device per-microbatch batch >= 1 on both meshes).  remat_group enables
+# sqrt-remat (EXPERIMENTS.md section Perf, command-r hillclimb).
+MICROBATCHES = {
+    "command-r-plus-104b": 4,   # sqrt-remat frees the activation memory that
+    "phi3-medium-14b": 8,       # micro=8 fits without sequence parallelism
+    "pixtral-12b": 8,           # and carries less gather traffic than the
+    "phi3.5-moe-42b-a6.6b": 8,  # micro=4 + SP variant (EXPERIMENTS.md Perf)
+    "moonshot-v1-16b-a3b": 4,
+    "hubert-xlarge": 2,
+}
+TRAIN_TWEAKS = {
+    # sequence parallelism halves activation memory but (CPU-measured) adds
+    # gather traffic -- applied only where the remat stash breaks the 16 GB
+    # budget (command-r); sqrt-remat for the same reason
+    "command-r-plus-104b": {"remat_group": 8, "sequence_parallel": True},
+    "moonshot-v1-16b-a3b": {"capacity_factor": 1.0},
+    "phi3.5-moe-42b-a6.6b": {"capacity_factor": 1.0},
+}
+# uneven KV heads (kv % 16 != 0) cannot stay TP-sharded through the decode
+# reshape; context-parallel (sequence-sharded) KV avoids per-layer re-gathers
+DECODE_TWEAKS = {
+    a: {"seq_shard_decode_cache": True}
+    for a in ("phi3-medium-14b", "phi3.5-moe-42b-a6.6b",
+              "command-r-plus-104b", "chatglm3-6b", "pixtral-12b")
+}
+DEFAULT_MICRO = 4
+
+
+def _mesh_tag(multi_pod: bool) -> str:
+    return "pod2x16x16" if multi_pod else "pod16x16"
+
+
+def cell_path(out_dir, arch, shape, multi_pod):
+    return os.path.join(out_dir, f"{_mesh_tag(multi_pod)}__{arch}__{shape}.json")
+
+
+def _mem_analysis(compiled):
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    if out:
+        live = (out.get("argument_size_in_bytes", 0)
+                + out.get("output_size_in_bytes", 0)
+                + out.get("temp_size_in_bytes", 0)
+                - out.get("alias_size_in_bytes", 0))
+        out["peak_bytes_per_device"] = int(live)
+        out["peak_gb_per_device"] = round(live / 2**30, 3)
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    reason = skip_reason(cfg, shape)
+    if reason:
+        return {"arch": arch, "shape": shape_name, "mesh": _mesh_tag(multi_pod),
+                "skipped": reason}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+    record = {"arch": arch, "shape": shape_name, "mesh": _mesh_tag(multi_pod),
+              "n_chips": n_chips}
+    t0 = time.time()
+
+    with jax.set_mesh(mesh):
+        if shape.kind == "train":
+            tweaks = TRAIN_TWEAKS.get(arch)
+            if tweaks:
+                cfg = dataclasses.replace(cfg, **tweaks)
+                record["tweaks"] = tweaks
+            micro = MICROBATCHES.get(arch, DEFAULT_MICRO)
+            n_data = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+            micro = min(micro, shape.global_batch // n_data)
+            record["microbatches"] = micro
+            step = steps.make_train_step(cfg, microbatches=micro)
+            state_shapes = specs.train_state_shapes(cfg)
+            state_sh = specs.train_state_shardings(cfg, mesh)
+            batch_sh = specs.input_shardings(cfg, shape, mesh)
+            jitted = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                             donate_argnums=0)
+            lowered = jitted.lower(state_shapes, specs.input_specs(cfg, shape))
+        elif shape.kind == "prefill":
+            step = steps.make_prefill_step(cfg)
+            p_shapes, p_sh = specs.param_cell(cfg, mesh)
+            batch_sh = specs.input_shardings(cfg, shape, mesh)
+            jitted = jax.jit(step, in_shardings=(p_sh, batch_sh))
+            lowered = jitted.lower(p_shapes, specs.input_specs(cfg, shape))
+        else:  # decode
+            tweaks = DECODE_TWEAKS.get(arch)
+            if tweaks and shape_name == "decode_32k":
+                cfg = dataclasses.replace(cfg, **tweaks)
+                record["tweaks"] = tweaks
+            step = steps.make_serve_step(cfg)
+            p_shapes, p_sh = specs.param_cell(cfg, mesh)
+            c_shapes, c_sh = specs.cache_cell(cfg, shape, mesh)
+            ins = specs.input_specs(cfg, shape)
+            in_sh = specs.input_shardings(cfg, shape, mesh)
+            jitted = jax.jit(step, in_shardings=(p_sh, c_sh, in_sh["tokens"],
+                                                 in_sh["pos"]),
+                             donate_argnums=1)
+            lowered = jitted.lower(p_shapes, c_shapes, ins["tokens"],
+                                   ins["pos"])
+
+        record["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        record["compile_s"] = round(time.time() - t1, 1)
+
+        mem = _mem_analysis(compiled)
+        print("memory_analysis:", mem)
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        raw = {"flops": float(cost.get("flops", 0.0)),
+               "bytes_accessed": float(cost.get("bytes accessed", 0.0))}
+        print("cost_analysis (loop bodies counted once): "
+              "flops=%.3e bytes=%.3e" % (raw["flops"], raw["bytes_accessed"]))
+
+        hlo = compiled.as_text()
+        coll = rl.collective_stats(hlo)
+        analytic = rl.analytic_cost(cfg, shape,
+                                    record.get("microbatches", 1))
+        terms = rl.roofline_terms(analytic, coll, n_chips,
+                                  rl.model_flops_for(cfg, shape), raw)
+
+    record.update({
+        "memory": mem,
+        "collectives": coll,
+        "roofline": terms,
+    })
+    return record
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", choices=ARCHS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch x shape x mesh) cell in subprocesses")
+    ap.add_argument("--meshes", default="single,multi",
+                    help="with --all: which meshes (single,multi)")
+    ap.add_argument("--out-dir", default="experiments/dryrun")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args(argv)
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    if args.all:
+        meshes = [m == "multi" for m in args.meshes.split(",")]
+        failures = []
+        for multi in meshes:
+            for arch in ARCHS:
+                for shape in SHAPES:
+                    path = cell_path(args.out_dir, arch, shape, multi)
+                    if os.path.exists(path) and not args.force:
+                        continue
+                    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                           "--arch", arch, "--shape", shape,
+                           "--out-dir", args.out_dir]
+                    if multi:
+                        cmd.append("--multi-pod")
+                    print("[dryrun] running", arch, shape,
+                          _mesh_tag(multi), flush=True)
+                    r = subprocess.run(cmd)
+                    if r.returncode != 0:
+                        failures.append((arch, shape, _mesh_tag(multi)))
+        print("[dryrun] complete; failures:", failures or "none")
+        sys.exit(1 if failures else 0)
+
+    assert args.arch and args.shape, "--arch and --shape required (or --all)"
+    path = cell_path(args.out_dir, args.arch, args.shape, args.multi_pod)
+    try:
+        record = run_cell(args.arch, args.shape, args.multi_pod)
+    except Exception as e:  # noqa: BLE001 -- record the failure verbatim
+        record = {"arch": args.arch, "shape": args.shape,
+                  "mesh": _mesh_tag(args.multi_pod),
+                  "error": f"{type(e).__name__}: {e}",
+                  "traceback": traceback.format_exc()}
+        with open(path, "w") as f:
+            json.dump(record, f, indent=2)
+        print(record["traceback"], file=sys.stderr)
+        sys.exit(1)
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2)
+    print(json.dumps({k: v for k, v in record.items()
+                      if k not in ("collectives",)}, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state.  Single pod: v5e-256 as (data=16, model=16).
+Multi-pod: 2 pods = 512 chips as (pod=2, data=16, model=16); the `pod` axis
+extends data parallelism across the inter-pod links.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes) -> jax.sharding.Mesh:
+    """Elastic variant: arbitrary (shape, axes) for scaled-down or scaled-up
+    deployments; checkpoint restore reshards across mesh changes."""
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def data_axis_size(mesh: jax.sharding.Mesh) -> int:
+    n = mesh.shape.get("data", 1)
+    return n * mesh.shape.get("pod", 1)

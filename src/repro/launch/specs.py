@@ -1,0 +1,165 @@
+"""ShapeDtypeStruct stand-ins + NamedShardings for every (arch x shape) cell.
+
+``input_specs`` follows the shannon/kernels pattern: weak-type-correct,
+shardable, zero device allocation.  Everything the dry-run lowers against is
+built here so launchers and the dry-run cannot drift apart.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro import models
+from repro.configs.shapes import ShapeCell
+from repro.launch.steps import TrainState
+from repro.models.common import ModelConfig, logical_to_mesh
+from repro.optim import OptState
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _axis_size(mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, tuple):
+        n = 1
+        for e in entry:
+            n *= mesh.shape.get(e, 1)
+        return n
+    return mesh.shape.get(entry, 1)
+
+
+def _fit(mesh, spec: P, shape) -> P:
+    """jit *arguments* must divide evenly by their sharding (intermediates
+    need not): drop mesh axes from dims that don't divide (e.g. hubert's
+    vocab=504 on a 16-way axis -> replicated)."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, entry in zip(shape, entries):
+        out.append(entry if dim % _axis_size(mesh, entry) == 0 else None)
+    return P(*out)
+
+
+def _ns(mesh, logical, shape=None):
+    spec = logical_to_mesh(logical, mesh)
+    if shape is not None:
+        spec = _fit(mesh, spec, shape)
+    return NamedSharding(mesh, spec)
+
+
+def _is_logical(x):
+    return isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+
+
+def _spec_to_sharding_tree(specs, mesh, shapes=None):
+    if shapes is None:
+        return jax.tree.map(lambda lg: _ns(mesh, lg), specs,
+                            is_leaf=_is_logical)
+    return jax.tree.map(
+        lambda lg, sds: _ns(mesh, lg, sds.shape), specs, shapes,
+        is_leaf=_is_logical,
+    )
+
+
+# ------------------------------------------------------------- model inputs
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeCell) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        return {"tokens": _sds((b, 1), jnp.int32),
+                "pos": _sds((), jnp.int32)}
+    batch: Dict[str, Any] = {}
+    if cfg.frontend == "audio":
+        batch["frames"] = _sds((b, s, cfg.frontend_dim), jnp.bfloat16)
+    else:
+        batch["tokens"] = _sds((b, s), jnp.int32)
+        if cfg.frontend == "vision":
+            batch["patches"] = _sds((b, 256, cfg.frontend_dim), jnp.bfloat16)
+    if shape.kind == "train":
+        batch["labels"] = _sds((b, s), jnp.int32)
+    return batch
+
+
+def input_shardings(cfg: ModelConfig, shape: ShapeCell, mesh) -> Dict[str, Any]:
+    out = {}
+    for k, sds in input_specs(cfg, shape).items():
+        if k == "pos":
+            out[k] = _ns(mesh, ())
+        elif k in ("frames", "patches"):
+            out[k] = _ns(mesh, ("batch", None, None), sds.shape)
+        else:
+            out[k] = _ns(mesh, ("batch", None), sds.shape)
+    return out
+
+
+# ------------------------------------------------------------- train state
+
+
+def train_state_shapes(cfg: ModelConfig, dtype=jnp.float32):
+    p = models.param_shapes(cfg, dtype)
+    return TrainState(
+        params=p,
+        opt=OptState(
+            m=jax.tree.map(lambda x: x, p),
+            v=jax.tree.map(lambda x: x, p),
+            step=_sds((), jnp.int32),
+        ),
+    )
+
+
+def train_state_shardings(cfg: ModelConfig, mesh):
+    specs = models.param_specs(cfg)
+    sh = _spec_to_sharding_tree(specs, mesh, models.param_shapes(cfg))
+    return TrainState(params=sh, opt=OptState(m=sh, v=sh, step=_ns(mesh, ())))
+
+
+# ------------------------------------------------------------- decode state
+
+
+def cache_cell(cfg: ModelConfig, shape: ShapeCell, mesh, dtype=jnp.bfloat16):
+    """(shapes, shardings) for the decode cache of this cell.  When the batch
+    is too small to shard (long_500k: batch=1), the KV sequence dim is
+    context-parallel sharded over the data(+pod) axes instead."""
+    b, s = shape.global_batch, shape.seq_len
+    shapes = models.cache_shapes(cfg, b, s, dtype)
+    specs = models.cache_specs(cfg, b, s)
+    n_data = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    tp = mesh.shape.get("model", 1)
+    if b < n_data:
+        def flip(lg):
+            if "kv_seq" in lg:
+                return tuple("batch" if a == "kv_seq"
+                             else (None if a == "batch" else a) for a in lg)
+            return tuple(None if a == "batch" else a for a in lg)
+
+        specs = jax.tree.map(flip, specs, is_leaf=_is_logical)
+    elif cfg.seq_shard_decode_cache:
+        # uneven KV heads cannot stay TP-sharded through the per-layer
+        # [B,T,Hkv*hd] -> [B,T,Hkv,hd] reshape: GSPMD re-gathers the whole
+        # 32k cache every layer (measured 27.5 ms/step collective on
+        # phi3-medium).  Shard the KV *sequence* over the model axis instead:
+        # decode attention reduces over the sharded axis with a tiny
+        # all-reduce of [B,1,H,hd] partials.
+        def seq_tp(lg):
+            if "kv_seq" in lg:
+                return tuple("tp" if a == "kv_seq"
+                             else (None if a == "tp" else a) for a in lg)
+            return lg
+
+        specs = jax.tree.map(seq_tp, specs, is_leaf=_is_logical)
+    return shapes, _spec_to_sharding_tree(specs, mesh, shapes)
+
+
+def param_cell(cfg: ModelConfig, mesh, dtype=jnp.bfloat16):
+    """(shapes, shardings) for serving parameters (bf16)."""
+    shapes = models.param_shapes(cfg, dtype)
+    return shapes, _spec_to_sharding_tree(models.param_specs(cfg), mesh, shapes)

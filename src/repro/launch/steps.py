@@ -1,0 +1,88 @@
+"""jit-able train / prefill / serve steps shared by the real launchers and the
+multi-pod dry-run.
+
+``make_train_step`` builds a gradient-accumulating (microbatched) step:
+  state, batch -> state, metrics
+``make_serve_step`` builds a one-token decode step:
+  params, cache, tokens, pos -> (next_tokens, logits, cache)
+``make_prefill_step`` builds the prefill forward:
+  params, batch -> next-token logits [B,1,V]
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import models
+from repro.optim import OptState, adamw_init, adamw_update
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: OptState
+
+
+def init_train_state(cfg, key, dtype=jnp.float32) -> TrainState:
+    params = models.init_params(cfg, key, dtype)
+    return TrainState(params=params, opt=adamw_init(params))
+
+
+def make_train_step(cfg, *, microbatches: int = 1, compute_dtype=jnp.bfloat16,
+                    **hyper):
+    """Gradient accumulation over ``microbatches`` splits of the global batch
+    (sequential lax.scan, so peak activation memory is one microbatch)."""
+
+    def loss_of(params, batch):
+        return models.loss_fn(params, cfg, batch, dtype=compute_dtype)
+
+    def train_step(state: TrainState, batch):
+        if microbatches > 1:
+            micro = jax.tree.map(
+                lambda x: x.reshape((microbatches, x.shape[0] // microbatches)
+                                    + x.shape[1:]),
+                batch,
+            )
+
+            def acc_fn(carry, mb):
+                gacc, lacc = carry
+                # barrier: stop XLA hoisting the (cheap) embedding gathers of
+                # every microbatch out of the loop -- that materializes
+                # batch-wide activation copies and defeats microbatching
+                mb = jax.lax.optimization_barrier(mb)
+                loss, g = jax.value_and_grad(loss_of)(state.params, mb)
+                return (jax.tree.map(jnp.add, gacc, g), lacc + loss), None
+
+            zeros = jax.tree.map(jnp.zeros_like, state.params)
+            (gsum, lsum), _ = jax.lax.scan(acc_fn, (zeros, 0.0), micro)
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            loss = lsum / microbatches
+        else:
+            loss, grads = jax.value_and_grad(loss_of)(state.params, batch)
+
+        new_params, opt, metrics = adamw_update(
+            grads, state.opt, state.params, **hyper)
+        metrics["loss"] = loss
+        return TrainState(new_params, opt), metrics
+
+    return train_step
+
+
+def make_serve_step(cfg, *, compute_dtype=jnp.bfloat16):
+    def serve_step(params, cache, tokens, pos):
+        logits, cache = models.decode_step(params, cache, cfg, tokens, pos,
+                                           dtype=compute_dtype)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        return nxt, logits, cache
+
+    return serve_step
+
+
+def make_prefill_step(cfg, *, compute_dtype=jnp.bfloat16):
+    def prefill_step(params, batch):
+        return models.forward(params, cfg, batch, dtype=compute_dtype,
+                              last_only=True)
+
+    return prefill_step

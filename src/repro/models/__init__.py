@@ -1,0 +1,30 @@
+"""Composable model definitions (pure JAX pytrees)."""
+from repro.models.common import ModelConfig
+from repro.models.model import (
+    cache_shapes,
+    forward_hidden,
+    cache_specs,
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    loss_fn,
+    model_defs,
+    param_shapes,
+    param_specs,
+)
+
+__all__ = [
+    "ModelConfig",
+    "model_defs",
+    "init_params",
+    "param_specs",
+    "param_shapes",
+    "forward",
+    "forward_hidden",
+    "loss_fn",
+    "init_cache",
+    "cache_specs",
+    "cache_shapes",
+    "decode_step",
+]

@@ -1,0 +1,238 @@
+"""Model configuration + sharding machinery.
+
+Pure-pytree module system (no flax): every layer is an ``init(key) -> params``
+function plus an ``apply(params, x) -> y`` function.  Parameter sharding is
+expressed with *logical axis names*; ``logical_to_mesh`` maps them onto the
+production mesh axes (DESIGN.md section 4):
+
+  logical axis -> mesh axis
+  ------------------------------
+  'fsdp'   -> 'data'  (ZeRO/FSDP parameter+optimizer sharding)
+  'tp'     -> 'model' (tensor parallel: heads / mlp hidden / experts / vocab)
+  'batch'  -> ('pod', 'data')
+  None     -> replicated
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+# ---------------------------------------------------------------- config
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int                  # 0 => attention-free (pure SSM)
+    kv_heads: int
+    d_ff: int                     # dense FFN hidden (0 => no FFN in blocks)
+    vocab: int
+    head_dim: int = 0             # 0 => d_model // n_heads
+    # block pattern
+    block: str = "attn"           # attn | moe | mamba | zamba (mamba + shared attn)
+    shared_attn_every: int = 6    # zamba: shared attention block period
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    # SSM (mamba2)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_conv: int = 4
+    # attention details
+    rope_theta: float = 10000.0
+    rope_fraction: float = 1.0    # chatglm: 0.5 (rotary on half the head dim)
+    causal: bool = True           # False => encoder (hubert)
+    # modality frontend stub
+    frontend: str = "none"        # none | audio | vision
+    frontend_dim: int = 0         # stub embedding feature dim
+    norm_eps: float = 1e-5
+    # serving knobs (overridable per shape cell)
+    seq_shard_decode_cache: bool = False  # context-parallel KV for decode
+    sequence_parallel: bool = False  # residual stream seq-sharded over 'tp'
+    # training knobs (overridable per shape cell)
+    remat: str = "full"           # full | none
+    remat_group: int = 0          # sqrt-remat: checkpoint groups of G layers
+    scan_layers: bool = True
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // max(self.n_heads, 1))
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def attention_free(self) -> bool:
+        return self.block == "mamba"
+
+    @property
+    def is_encoder(self) -> bool:
+        return not self.causal
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding + blocks + head)."""
+        d, v = self.d_model, self.vocab
+        total = v * d  # embedding
+        total += d * v  # lm head (untied)
+        if self.frontend_dim:
+            total += self.frontend_dim * d
+        attn = d * self.n_heads * self.hd + 2 * d * self.kv_heads * self.hd \
+            + self.n_heads * self.hd * d if self.n_heads else 0
+        dense_ffn = 3 * d * self.d_ff if self.d_ff else 0
+        moe_ffn = self.n_experts * 3 * d * self.d_ff if self.n_experts else 0
+        di, n, h = self.d_inner, self.ssm_state, self.ssm_heads
+        mamba = (2 * d * di + 2 * d * n + d * h + self.ssm_conv * (di + 2 * n)
+                 + 3 * h + di + di * d)
+        per_layer = {
+            "attn": attn + dense_ffn + 2 * d,
+            "moe": attn + d * self.n_experts + moe_ffn + 2 * d,
+            "mamba": mamba + d,
+            "zamba": mamba + d,
+        }[self.block]
+        total += self.n_layers * per_layer
+        if self.block == "zamba":
+            total += attn + dense_ffn + 2 * d  # one shared block
+        return total
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: top_k of n_experts)."""
+        if self.block != "moe" or not self.n_experts:
+            return self.param_count()
+        d = self.d_model
+        moe_all = self.n_experts * 3 * d * self.d_ff
+        moe_act = self.top_k * 3 * d * self.d_ff
+        return self.param_count() - self.n_layers * (moe_all - moe_act)
+
+
+# ---------------------------------------------------------------- sharding
+
+LOGICAL_RULES: Dict[str, Any] = {
+    "batch": ("pod", "data"),
+    "fsdp": "data",
+    "tp": "model",
+    "seq": None,
+    "kv_seq": None,
+    "embed": None,
+    "heads": "model",
+    "vocab": "model",
+    "mlp": "model",
+    "experts": "model",
+    "layers": None,
+    "stage": None,
+}
+
+
+def logical_to_mesh(logical: Tuple[Optional[str], ...],
+                    mesh: Optional[jax.sharding.Mesh] = None) -> P:
+    """Translate a tuple of logical axis names into a PartitionSpec, dropping
+    mesh axes that do not exist on the given mesh (e.g. 'pod' on a single
+    pod)."""
+    names = set(mesh.axis_names) if mesh is not None else {"data", "model", "pod"}
+    out = []
+    for ax in logical:
+        if ax is None:
+            out.append(None)
+            continue
+        m = LOGICAL_RULES.get(ax, None)
+        if m is None:
+            out.append(None)
+        elif isinstance(m, tuple):
+            kept = tuple(x for x in m if x in names)
+            out.append(kept if len(kept) > 1 else (kept[0] if kept else None))
+        else:
+            out.append(m if m in names else None)
+    return P(*out)
+
+
+def spec_tree_to_shardings(specs, mesh):
+    """Map a pytree of logical-axis tuples to NamedShardings on ``mesh``."""
+    return jax.tree.map(
+        lambda lg: jax.sharding.NamedSharding(mesh, logical_to_mesh(lg, mesh)),
+        specs,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x
+        ),
+    )
+
+
+def shard(x, logical: Tuple[Optional[str], ...]):
+    """Activation sharding constraint by logical axes.  Resolves against the
+    ambient (abstract) mesh; no-op when there is none (CPU unit tests)."""
+    mesh = jax.sharding.get_abstract_mesh()
+    if not mesh.axis_names:
+        return x
+    return jax.lax.with_sharding_constraint(x, logical_to_mesh(logical, mesh))
+
+
+# ------------------------------------------------------------- param utils
+
+
+def trunc_normal(key, shape, scale, dtype=jnp.float32):
+    return scale * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+
+
+class ParamDef:
+    """A parameter template: shape + logical sharding + initializer."""
+
+    def __init__(self, shape, logical, init="normal", scale=None):
+        self.shape = tuple(shape)
+        self.logical = tuple(logical)
+        self.init = init
+        self.scale = scale
+
+    def materialize(self, key, dtype=jnp.float32):
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, dtype)
+        if self.init == "ssm_a":
+            # a_log init: A in [1, 16) -> a = -exp(a_log)
+            u = jax.random.uniform(key, self.shape, dtype, 1.0, 16.0)
+            return jnp.log(u)
+        if self.init == "dt_bias":
+            # softplus^-1 of dt ~ U[1e-3, 1e-1]
+            dt = jnp.exp(jax.random.uniform(key, self.shape, dtype) *
+                         (jnp.log(0.1) - jnp.log(0.001)) + jnp.log(0.001))
+            return dt + jnp.log(-jnp.expm1(-dt))
+        fan_in = self.shape[0] if len(self.shape) > 1 else self.shape[-1]
+        scale = self.scale if self.scale is not None else fan_in ** -0.5
+        return trunc_normal(key, self.shape, scale, dtype)
+
+
+def init_tree(defs, key, dtype=jnp.float32):
+    """Materialize a pytree of ParamDef into parameters (deterministic keys)."""
+    leaves, treedef = jax.tree.flatten(
+        defs, is_leaf=lambda x: isinstance(x, ParamDef)
+    )
+    keys = jax.random.split(key, len(leaves))
+    vals = [d.materialize(k, dtype) for d, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def spec_tree(defs):
+    """Extract the logical-axis pytree from a ParamDef pytree."""
+    return jax.tree.map(
+        lambda d: d.logical, defs, is_leaf=lambda x: isinstance(x, ParamDef)
+    )
+
+
+def shape_tree(defs, dtype=jnp.float32):
+    """ShapeDtypeStructs for AOT lowering without allocation."""
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, dtype),
+        defs,
+        is_leaf=lambda x: isinstance(x, ParamDef),
+    )

@@ -1,0 +1,351 @@
+"""Layer library: RMSNorm, RoPE, GQA attention, dense/MoE FFN, Mamba-2 block.
+
+Every layer is a pair of functions:
+  ``*_defs(cfg)``  -> pytree of ParamDef (shapes + logical sharding + init)
+  ``*_apply(p, x, cfg, ...)`` -> output
+
+Compute dtype follows ``x.dtype`` (weights are cast at use); master params
+stay float32.  KV heads are broadcast to query heads before the attention
+kernel call, so uneven head counts (e.g. phi3-medium 40H/kv10 on a 16-way TP
+axis) shard via GSPMD padding without reshape hazards.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.attention import ops as attn_ops
+from repro.kernels.ssd import ops as ssd_ops
+from repro.models.common import ModelConfig, ParamDef, shard
+
+# ---------------------------------------------------------------- norms
+
+
+def rmsnorm_defs(d):
+    return {"scale": ParamDef((d,), ("embed",), init="ones")}
+
+
+def rmsnorm(p, x, eps):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return y * p["scale"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------- rope
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float, fraction: float):
+    """Rotary embedding on the first ``fraction`` of the head dim (half-split
+    layout).  x [B,S,H,D]; positions [S] or [B,S]."""
+    d = x.shape[-1]
+    rot = int(d * fraction)
+    rot -= rot % 2
+    if rot == 0:
+        return x
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    half = rot // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        ang = positions[:, None].astype(jnp.float32) * freq[None, :]  # [S,half]
+        ang = ang[None, :, None, :]                                   # [1,S,1,half]
+    else:
+        ang = positions[..., None].astype(jnp.float32) * freq        # [B,S,half]
+        ang = ang[:, :, None, :]
+    sin, cos = jnp.sin(ang).astype(x.dtype), jnp.cos(ang).astype(x.dtype)
+    x1, x2 = x_rot[..., :half], x_rot[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([out, x_pass], axis=-1) if rot < d else out
+
+
+# ---------------------------------------------------------------- attention
+
+
+def attention_defs(cfg: ModelConfig):
+    # fused [D, H*hd] layouts: the flattened head dim is always divisible by
+    # the 16-way TP axis (individual head counts often are not, e.g.
+    # phi3-medium 40H/kv10); the head split happens on intermediates, where
+    # GSPMD tolerates uneven sharding via padding
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.kv_heads, cfg.hd
+    return {
+        "wq": ParamDef((d, hq * hd), ("fsdp", "tp")),
+        "wk": ParamDef((d, hkv * hd), ("fsdp", "tp")),
+        "wv": ParamDef((d, hkv * hd), ("fsdp", "tp")),
+        "wo": ParamDef((hq * hd, d), ("tp", "fsdp")),
+    }
+
+
+def _qkv(p, x, cfg: ModelConfig, positions):
+    dt = x.dtype
+    b, s, _ = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.kv_heads, cfg.hd
+    q = jnp.einsum("bsd,de->bse", x, p["wq"].astype(dt)).reshape(b, s, hq, hd)
+    k = jnp.einsum("bsd,de->bse", x, p["wk"].astype(dt)).reshape(b, s, hkv, hd)
+    v = jnp.einsum("bsd,de->bse", x, p["wv"].astype(dt)).reshape(b, s, hkv, hd)
+    q = rope(q, positions, cfg.rope_theta, cfg.rope_fraction)
+    k = rope(k, positions, cfg.rope_theta, cfg.rope_fraction)
+    return q, k, v
+
+
+def _broadcast_kv(k: jnp.ndarray, n_q: int) -> jnp.ndarray:
+    """[B,T,Hkv,D] -> [B,T,Hq,D] by group broadcast."""
+    b, t, hkv, d = k.shape
+    g = n_q // hkv
+    if g == 1:
+        return k
+    return jnp.broadcast_to(
+        k[:, :, :, None, :], (b, t, hkv, g, d)
+    ).reshape(b, t, n_q, d)
+
+
+def attention_apply(p, x, cfg: ModelConfig, positions=None):
+    """Full-sequence attention (train / prefill).  Returns (out, (k, v))."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)
+    q, k, v = _qkv(p, x, cfg, positions)
+    q = shard(q, ("batch", None, "heads", None))
+    # constrain the broadcast copies too: they are custom_vjp residuals and
+    # must keep batch sharding across the remat boundary
+    kb = shard(_broadcast_kv(k, cfg.n_heads), ("batch", None, "heads", None))
+    vb = shard(_broadcast_kv(v, cfg.n_heads), ("batch", None, "heads", None))
+    o = attn_ops.attention(q, kb, vb, causal=cfg.causal)
+    b, s_len = o.shape[0], o.shape[1]
+    out = jnp.einsum("bse,ed->bsd", o.reshape(b, s_len, -1),
+                     p["wo"].astype(x.dtype))
+    return shard(out, ("batch", None, "embed")), (k, v)
+
+
+def attention_decode(p, x, cache_k, cache_v, pos, cfg: ModelConfig):
+    """One-token decode.  x [B,1,D]; cache [B,T,Hkv*hd] (fused head axis so
+    TP sharding survives uneven head counts); pos is a scalar (aligned batch
+    decode) or a [B] vector (continuous batching: per-slot positions).
+    Returns (out, new_cache_k, new_cache_v)."""
+    bsz, t = cache_k.shape[0], cache_k.shape[1]
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 0:
+        positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    else:
+        positions = pos[:, None]
+    q, k, v = _qkv(p, x, cfg, positions)
+    k = k.reshape(bsz, 1, cfg.kv_heads * cfg.hd)
+    v = v.reshape(bsz, 1, cfg.kv_heads * cfg.hd)
+    if pos.ndim == 0:
+        cache_k = jax.lax.dynamic_update_slice_in_dim(
+            cache_k, k.astype(cache_k.dtype), pos, axis=1)
+        cache_v = jax.lax.dynamic_update_slice_in_dim(
+            cache_v, v.astype(cache_v.dtype), pos, axis=1)
+    else:  # per-slot scatter
+        rows = jnp.arange(bsz)
+        cache_k = cache_k.at[rows, pos].set(k[:, 0].astype(cache_k.dtype))
+        cache_v = cache_v.at[rows, pos].set(v[:, 0].astype(cache_v.dtype))
+    length = jnp.broadcast_to(pos + 1, (x.shape[0],)).astype(jnp.int32)
+    if cfg.seq_shard_decode_cache:
+        # context-parallel decode: KV (and its head-broadcast views) stay
+        # sequence-sharded over the model axis; the softmax reduction over
+        # the sharded axis costs one tiny all-reduce of [B,1,H,hd] partials
+        # instead of re-gathering the 32k cache every layer
+        cache_k = shard(cache_k, ("batch", "tp", None))
+        cache_v = shard(cache_v, ("batch", "tp", None))
+        kv_axes = ("batch", "tp", None, None)
+    else:
+        kv_axes = ("batch", None, "heads", None)
+    kc = shard(cache_k.reshape(bsz, t, cfg.kv_heads, cfg.hd), kv_axes)
+    vc = shard(cache_v.reshape(bsz, t, cfg.kv_heads, cfg.hd), kv_axes)
+    o = attn_ops.decode_attention(
+        q,
+        shard(_broadcast_kv(kc, cfg.n_heads).astype(q.dtype), kv_axes),
+        shard(_broadcast_kv(vc, cfg.n_heads).astype(q.dtype), kv_axes),
+        length,
+    )
+    out = jnp.einsum("bse,ed->bsd", o.reshape(o.shape[0], 1, -1),
+                     p["wo"].astype(x.dtype))
+    return out, cache_k, cache_v
+
+
+# ---------------------------------------------------------------- dense FFN
+
+
+def ffn_defs(cfg: ModelConfig, gated: bool = True):
+    d, f = cfg.d_model, cfg.d_ff
+    defs = {
+        "wi": ParamDef((d, f), ("fsdp", "mlp")),
+        "wo": ParamDef((f, d), ("mlp", "fsdp")),
+    }
+    if gated:
+        defs["wg"] = ParamDef((d, f), ("fsdp", "mlp"))
+    return defs
+
+
+def ffn_apply(p, x, cfg: ModelConfig):
+    dt = x.dtype
+    h = jnp.einsum("bsd,df->bsf", x, p["wi"].astype(dt))
+    if "wg" in p:  # SwiGLU
+        g = jnp.einsum("bsd,df->bsf", x, p["wg"].astype(dt))
+        h = jax.nn.silu(g) * h
+    else:  # GELU (encoder-style)
+        h = jax.nn.gelu(h)
+    h = shard(h, ("batch", None, "mlp"))
+    out = jnp.einsum("bsf,fd->bsd", h, p["wo"].astype(dt))
+    return shard(out, ("batch", None, "embed"))
+
+
+# ---------------------------------------------------------------- MoE FFN
+
+
+def moe_defs(cfg: ModelConfig):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    return {
+        "router": ParamDef((d, e), ("fsdp", None), scale=d ** -0.5),
+        # gate and up projections fused into one [E, D, 2F] matmul: one pass
+        # over the dispatch buffer instead of two
+        "wi": ParamDef((e, d, 2 * f), ("experts", "fsdp", None)),
+        "wo": ParamDef((e, f, d), ("experts", None, "fsdp")),
+    }
+
+
+def moe_apply(p, x, cfg: ModelConfig):
+    """Grouped sort-based top-k dispatch (no one-hot einsum: FLOPs stay
+    6*N_active*D).
+
+    Routing is per *group* (= sequence / batch row), so dispatch index math is
+    local to the data shard; expert buffers are [G, E, C, D] sharded
+    (batch, experts) and the reshard from data-local groups to model-sharded
+    experts is the all-to-all.  Routing over the flat global token set would
+    build ~token-count-sized replicated buffers (we measured 100 GB/device on
+    moonshot prefill_32k) -- grouping is what makes EP shardable.
+    """
+    b, s, d = x.shape
+    e, k, dt = cfg.n_experts, cfg.top_k, x.dtype
+    cap = int((s * k / e) * cfg.capacity_factor + 0.5)
+    cap = max(min(cap, s), min(s, 4), 1)  # dropless for tiny groups (decode)
+    router = p["router"].astype(dt)
+
+    def route(xg):
+        """One group: xg [S, D] -> (buf [E,C,D], slot, weight, token_of)."""
+        logits = jnp.einsum("td,de->te", xg, router).astype(jnp.float32)
+        gates, idx = jax.lax.top_k(logits, k)                # [S,k]
+        gates = jax.nn.softmax(gates, axis=-1)
+        flat = idx.reshape(-1)                               # [S*k]
+        order = jnp.argsort(flat, stable=True)
+        sorted_e = flat[order]
+        token_of = order // k
+        starts = jnp.searchsorted(sorted_e, jnp.arange(e), side="left")
+        pos = jnp.arange(s * k) - starts[sorted_e]
+        keep = pos < cap
+        slot = jnp.where(keep, sorted_e * cap + pos, e * cap)
+        buf = jnp.zeros((e * cap + 1, d), dt).at[slot].set(xg[token_of])
+        weight = gates.reshape(-1)[order] * keep
+        return buf[: e * cap].reshape(e, cap, d), slot, weight, token_of
+
+    buf, slot, weight, token_of = jax.vmap(route)(x)         # [B,E,C,D], ...
+    buf = shard(buf, ("batch", "experts", None, None))
+
+    hg = jnp.einsum("gecd,edf->gecf", buf, p["wi"].astype(dt))
+    h, g = jnp.split(hg, 2, axis=-1)
+    out = jnp.einsum("gecf,efd->gecd", jax.nn.silu(g) * h, p["wo"].astype(dt))
+    out = shard(out, ("batch", "experts", None, None))
+
+    def combine(outg, slotg, wg, tokg):
+        outf = jnp.concatenate([outg.reshape(e * cap, d),
+                                jnp.zeros((1, d), dt)])
+        contrib = outf[slotg] * wg[:, None].astype(dt)
+        return jnp.zeros((s, d), dt).at[tokg].add(contrib)
+
+    y = jax.vmap(combine)(out, slot, weight, token_of)
+    return shard(y, ("batch", None, "embed"))
+
+
+# ---------------------------------------------------------------- Mamba-2
+
+
+def mamba_defs(cfg: ModelConfig):
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    w = cfg.ssm_conv
+    return {
+        "in_z": ParamDef((d, di), ("fsdp", "tp")),
+        "in_x": ParamDef((d, di), ("fsdp", "tp")),
+        "in_b": ParamDef((d, n), ("fsdp", None)),
+        "in_c": ParamDef((d, n), ("fsdp", None)),
+        "in_dt": ParamDef((d, h), ("fsdp", "tp")),
+        "conv_x": ParamDef((w, di), (None, "tp"), scale=w ** -0.5),
+        "conv_b": ParamDef((w, n), (None, None), scale=w ** -0.5),
+        "conv_c": ParamDef((w, n), (None, None), scale=w ** -0.5),
+        "a_log": ParamDef((h,), ("tp",), init="ssm_a"),
+        "dt_bias": ParamDef((h,), ("tp",), init="dt_bias"),
+        "d_skip": ParamDef((h,), ("tp",), init="ones"),
+        "norm": ParamDef((di,), ("tp",), init="ones"),
+        "out": ParamDef((di, d), ("tp", "fsdp")),
+    }
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv.  x [B,S,C]; w [W,C]; state [B,W-1,C] or None.
+    Returns (y, new_state)."""
+    width = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :].astype(x.dtype)
+        for i in range(width)
+    )
+    new_state = xp[:, -(width - 1) :, :] if width > 1 else state
+    return jax.nn.silu(y), new_state
+
+
+def _mamba_proj(p, x, cfg: ModelConfig):
+    dt_ = x.dtype
+    z = jnp.einsum("bsd,de->bse", x, p["in_z"].astype(dt_))
+    xs = jnp.einsum("bsd,de->bse", x, p["in_x"].astype(dt_))
+    bb = jnp.einsum("bsd,dn->bsn", x, p["in_b"].astype(dt_))
+    cc = jnp.einsum("bsd,dn->bsn", x, p["in_c"].astype(dt_))
+    dt = jnp.einsum("bsd,dh->bsh", x, p["in_dt"].astype(dt_))
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    return z, xs, bb, cc, dt
+
+
+def _gated_out(p, y, z, cfg, shape_bsd):
+    b, s, _ = shape_bsd
+    y = y.reshape(b, s, cfg.d_inner)
+    # gated RMSNorm (mamba2): norm(y * silu(z))
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + cfg.norm_eps).astype(y.dtype)
+    y = y * p["norm"].astype(y.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, p["out"].astype(y.dtype))
+    return shard(out, ("batch", None, "embed"))
+
+
+def mamba_apply(p, x, cfg: ModelConfig):
+    """Full-sequence Mamba-2 block (train / prefill).  Returns (out, state)
+    where state = (conv_x, conv_b, conv_c, ssm)."""
+    b, s, _ = x.shape
+    z, xs, bb, cc, dt = _mamba_proj(p, x, cfg)
+    xs, st_x = _causal_conv(xs, p["conv_x"])
+    bb, st_b = _causal_conv(bb, p["conv_b"])
+    cc, st_c = _causal_conv(cc, p["conv_c"])
+    xh = xs.reshape(b, s, cfg.ssm_heads, cfg.ssm_head_dim)
+    xh = shard(xh, ("batch", None, "tp", None))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    y, ssm = ssd_ops.ssd(xh, dt, a, bb, cc, d_skip=p["d_skip"])
+    out = _gated_out(p, y, z, cfg, (b, s, cfg.d_model))
+    return out, (st_x, st_b, st_c, ssm)
+
+
+def mamba_decode(p, x, state, cfg: ModelConfig):
+    """One-token decode.  x [B,1,D]; state=(conv_x,conv_b,conv_c,ssm)."""
+    b = x.shape[0]
+    st_x, st_b, st_c, ssm = state
+    z, xs, bb, cc, dt = _mamba_proj(p, x, cfg)
+    xs, st_x = _causal_conv(xs, p["conv_x"], st_x)
+    bb, st_b = _causal_conv(bb, p["conv_b"], st_b)
+    cc, st_c = _causal_conv(cc, p["conv_c"], st_c)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    xh = xs.reshape(b, cfg.ssm_heads, cfg.ssm_head_dim)
+    ssm, y = ssd_ops.ssd_update(
+        ssm, xh, dt[:, 0], a, bb[:, 0], cc[:, 0], d_skip=p["d_skip"]
+    )
+    out = _gated_out(p, y[:, None], z, cfg, (b, 1, cfg.d_model))
+    return out, (st_x, st_b, st_c, ssm)

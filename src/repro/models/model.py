@@ -1,0 +1,400 @@
+"""Model assembly: param defs, forward, loss, prefill and one-token decode for
+all assigned architecture families (dense / MoE / SSM / hybrid / encoder / VLM).
+
+Layers are stacked on a leading axis and scanned (``lax.scan``) so HLO size --
+and therefore dry-run compile time -- is O(1) in depth.  The zamba (hybrid)
+family scans groups of ``shared_attn_every`` mamba blocks with a single
+weight-tied attention block applied between groups.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.common import (
+    ModelConfig,
+    ParamDef,
+    init_tree,
+    shard,
+    shape_tree,
+    spec_tree,
+)
+
+# ------------------------------------------------------------- definitions
+
+
+def _stack(defs, n: int):
+    """Prepend a stacked-layer axis to every ParamDef in a tree."""
+    return jax.tree.map(
+        lambda d: ParamDef((n,) + d.shape, ("layers",) + d.logical,
+                           init=d.init, scale=d.scale),
+        defs,
+        is_leaf=lambda x: isinstance(x, ParamDef),
+    )
+
+
+def _block_defs(cfg: ModelConfig):
+    if cfg.block == "attn":
+        d = {
+            "ln1": L.rmsnorm_defs(cfg.d_model),
+            "attn": L.attention_defs(cfg),
+            "ln2": L.rmsnorm_defs(cfg.d_model),
+            "ffn": L.ffn_defs(cfg, gated=not cfg.is_encoder),
+        }
+        return d
+    if cfg.block == "moe":
+        return {
+            "ln1": L.rmsnorm_defs(cfg.d_model),
+            "attn": L.attention_defs(cfg),
+            "ln2": L.rmsnorm_defs(cfg.d_model),
+            "moe": L.moe_defs(cfg),
+        }
+    if cfg.block in ("mamba", "zamba"):
+        return {
+            "ln": L.rmsnorm_defs(cfg.d_model),
+            "mamba": L.mamba_defs(cfg),
+        }
+    raise ValueError(cfg.block)
+
+
+def model_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    defs: Dict[str, Any] = {
+        # vocab-sharded only: a second (fsdp) sharded dim makes the token
+        # gather un-partitionable (SPMD "involuntary full rematerialization"
+        # replicates the activations and destroys batch sharding downstream)
+        "embed": ParamDef((cfg.vocab, cfg.d_model), ("vocab", None), scale=1.0),
+        "final_norm": L.rmsnorm_defs(cfg.d_model),
+        "head": ParamDef((cfg.d_model, cfg.vocab), ("fsdp", "vocab")),
+        "layers": _stack(_block_defs(cfg), cfg.n_layers),
+    }
+    if cfg.frontend != "none":
+        defs["frontend"] = {
+            "proj": ParamDef((cfg.frontend_dim, cfg.d_model), ("fsdp", None))
+        }
+    if cfg.block == "zamba":
+        defs["shared"] = {
+            "ln1": L.rmsnorm_defs(cfg.d_model),
+            "attn": L.attention_defs(cfg),
+            "ln2": L.rmsnorm_defs(cfg.d_model),
+            "ffn": L.ffn_defs(cfg, gated=True),
+        }
+    return defs
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.float32):
+    return init_tree(model_defs(cfg), key, dtype)
+
+
+def param_specs(cfg: ModelConfig):
+    return spec_tree(model_defs(cfg))
+
+
+def param_shapes(cfg: ModelConfig, dtype=jnp.float32):
+    return shape_tree(model_defs(cfg), dtype)
+
+
+# ----------------------------------------------------------------- blocks
+
+
+def _res_axes(cfg: ModelConfig):
+    # Megatron-style sequence parallelism: between blocks the residual stream
+    # (= the remat stash) is sharded on seq over the model axis, cutting
+    # activation memory 16x; GSPMD gathers seq at the attention boundary and
+    # reduce-scatters the block output (same bytes as the plain all-reduce).
+    return ("batch", "tp", None) if cfg.sequence_parallel else ("batch", None, None)
+
+
+def _attn_block(p, x, cfg: ModelConfig, positions=None):
+    # pin the residual-stream sharding: the scanned layer inputs are the remat
+    # stash, and without this XLA prefers to shard them on d_model (matching
+    # the FSDP weight layout), replicating the batch dim -- 16x the memory
+    x = shard(x, _res_axes(cfg))
+    h, _ = L.attention_apply(p["attn"], L.rmsnorm(p["ln1"], x, cfg.norm_eps),
+                             cfg, positions)
+    x = x + h
+    key = "moe" if "moe" in p else "ffn"
+    fn = L.moe_apply if key == "moe" else L.ffn_apply
+    x = x + fn(p[key], L.rmsnorm(p["ln2"], x, cfg.norm_eps), cfg)
+    return x
+
+
+def _mamba_block(p, x, cfg: ModelConfig):
+    x = shard(x, _res_axes(cfg))  # see _attn_block
+    h, _ = L.mamba_apply(p["mamba"], L.rmsnorm(p["ln"], x, cfg.norm_eps), cfg)
+    return x + h
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    if cfg.remat == "full":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+    return fn
+
+
+# ---------------------------------------------------------------- forward
+
+
+def _embed_inputs(params, cfg: ModelConfig, batch, dtype):
+    """Token / frontend embedding.  batch keys: tokens [B,S] and/or
+    frames|patches [B,P,F] (stub modality embeddings)."""
+    if cfg.frontend == "audio":
+        x = jnp.einsum("bsf,fd->bsd", batch["frames"].astype(dtype),
+                       params["frontend"]["proj"].astype(dtype))
+    else:
+        x = params["embed"].astype(dtype)[batch["tokens"]]
+        if cfg.frontend == "vision" and "patches" in batch:
+            pe = jnp.einsum("bpf,fd->bpd", batch["patches"].astype(dtype),
+                            params["frontend"]["proj"].astype(dtype))
+            npatch = pe.shape[1]
+            x = jnp.concatenate([pe, x[:, npatch:]], axis=1)
+    return shard(x, ("batch", None, "embed"))
+
+
+def _cast_params(params, dtype):
+    """Cast the whole tree to compute dtype ONCE, before the layer scan: the
+    per-layer FSDP all-gathers then move bf16 instead of f32 master weights
+    (half the weight-streaming collective bytes)."""
+    return jax.tree.map(
+        lambda w: w.astype(dtype) if w.dtype == jnp.float32 else w, params)
+
+
+def forward_hidden(params, cfg: ModelConfig, batch, dtype=jnp.bfloat16):
+    """Full-sequence forward up to the final norm -> hidden [B,S,D]."""
+    params = _cast_params(params, dtype)
+    x = _embed_inputs(params, cfg, batch, dtype)
+
+    if cfg.block in ("attn", "moe"):
+        fn = _maybe_remat(lambda lp, h: _attn_block(lp, h, cfg), cfg)
+        if (cfg.remat_group and cfg.scan_layers
+                and cfg.n_layers % cfg.remat_group == 0):
+            # sqrt-remat: the outer scan stashes only L/G group inputs; each
+            # group recomputes its G per-block inputs during its backward.
+            # Peak stash ~ (L/G + G) * |x| instead of L * |x|.
+            g = cfg.remat_group
+            grouped = jax.tree.map(
+                lambda a: a.reshape((cfg.n_layers // g, g) + a.shape[1:]),
+                params["layers"])
+
+            @jax.checkpoint
+            def group_fn(h, gp):
+                h, _ = jax.lax.scan(lambda hh, lp: (fn(lp, hh), None), h, gp)
+                return h
+
+            x, _ = jax.lax.scan(lambda h, gp: (group_fn(h, gp), None), x,
+                                grouped)
+        elif cfg.scan_layers:
+            x, _ = jax.lax.scan(lambda h, lp: (fn(lp, h), None), x,
+                                params["layers"])
+        else:
+            for i in range(cfg.n_layers):
+                x = fn(jax.tree.map(lambda a: a[i], params["layers"]), x)
+    elif cfg.block == "mamba":
+        fn = _maybe_remat(lambda lp, h: _mamba_block(lp, h, cfg), cfg)
+        x, _ = jax.lax.scan(lambda h, lp: (fn(lp, h), None), x, params["layers"])
+    elif cfg.block == "zamba":
+        k = cfg.shared_attn_every
+        groups = cfg.n_layers // k
+        grouped = jax.tree.map(
+            lambda a: a.reshape((groups, k) + a.shape[1:]), params["layers"]
+        )
+        mfn = _maybe_remat(lambda lp, h: _mamba_block(lp, h, cfg), cfg)
+        sfn = _maybe_remat(lambda sp, h: _attn_block(sp, h, cfg), cfg)
+
+        def group_fn(h, gp):
+            h, _ = jax.lax.scan(lambda hh, lp: (mfn(lp, hh), None), h, gp)
+            h = sfn(params["shared"], h)  # weight-tied shared attention block
+            return h, None
+
+        x, _ = jax.lax.scan(group_fn, x, grouped)
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return x
+
+
+def forward(params, cfg: ModelConfig, batch, dtype=jnp.bfloat16,
+            last_only: bool = False):
+    """Full-sequence forward -> logits [B,S,V] (or [B,1,V] for serving
+    prefill, which only needs the next-token distribution)."""
+    x = forward_hidden(params, cfg, batch, dtype)
+    if last_only:
+        x = x[:, -1:]
+    logits = jnp.einsum("bsd,dv->bsv", x, params["head"].astype(dtype))
+    return shard(logits, ("batch", None, "vocab"))
+
+
+def loss_fn(params, cfg: ModelConfig, batch, dtype=jnp.bfloat16,
+            ce_chunk: int = 512):
+    """Mean next-token (decoder) or masked-unit (encoder) cross-entropy.
+
+    The head matmul + logsumexp run in sequence chunks so the [B,S,V] logits
+    tensor is never materialized (command-r at 4k x 256k vocab would be a
+    4.2 GB f32 transient per microbatch otherwise)."""
+    x = forward_hidden(params, cfg, batch, dtype)          # [B,S,D]
+    labels = batch["labels"]
+    b, s, d = x.shape
+    chunk = min(ce_chunk, s)
+    n = s // chunk
+    head = params["head"].astype(dtype)
+
+    @jax.checkpoint  # recompute chunk logits in bwd: never stack them
+    def one(args):
+        xc, yc = args                                       # [B,C,D], [B,C]
+        logits = jnp.einsum("bsd,dv->bsv", xc, head).astype(jnp.float32)
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, yc[..., None], axis=-1)[..., 0]
+        return jnp.sum(logz - gold)
+
+    if n * chunk == s and n > 1:
+        xs = x.reshape(b, n, chunk, d).swapaxes(0, 1)       # [n,B,C,D]
+        ys = labels.reshape(b, n, chunk).swapaxes(0, 1)
+        total = jnp.sum(jax.lax.map(one, (xs, ys)))
+    else:
+        total = one((x, labels))
+    return total / (b * s)
+
+
+# ------------------------------------------------------------ decode state
+
+
+def cache_defs(cfg: ModelConfig, batch: int, max_len: int):
+    """ParamDef tree for the decode cache (zeros-init; bf16 KV, f32 SSM)."""
+    hkv, hd = cfg.kv_heads, cfg.hd
+    di, n, h, p_, w = (cfg.d_inner, cfg.ssm_state, cfg.ssm_heads,
+                       cfg.ssm_head_dim, cfg.ssm_conv)
+
+    def kv(n_layers):
+        # fused head*dim axis: always divisible by the TP axis, so the cache
+        # keeps its model sharding even when kv_heads < tp (e.g. kv=8 on 16)
+        return {
+            "k": ParamDef((n_layers, batch, max_len, hkv * hd),
+                          ("layers", "batch", "kv_seq", "tp"), init="zeros"),
+            "v": ParamDef((n_layers, batch, max_len, hkv * hd),
+                          ("layers", "batch", "kv_seq", "tp"), init="zeros"),
+        }
+
+    def mamba_state(n_layers):
+        return {
+            "conv_x": ParamDef((n_layers, batch, w - 1, di),
+                               ("layers", "batch", None, "tp"), init="zeros"),
+            "conv_b": ParamDef((n_layers, batch, w - 1, n),
+                               ("layers", "batch", None, None), init="zeros"),
+            "conv_c": ParamDef((n_layers, batch, w - 1, n),
+                               ("layers", "batch", None, None), init="zeros"),
+            "ssm": ParamDef((n_layers, batch, h, p_, n),
+                            ("layers", "batch", "tp", None, None), init="zeros"),
+        }
+
+    if cfg.block in ("attn", "moe"):
+        return kv(cfg.n_layers)
+    if cfg.block == "mamba":
+        return mamba_state(cfg.n_layers)
+    if cfg.block == "zamba":
+        groups = cfg.n_layers // cfg.shared_attn_every
+        return {"mamba": mamba_state(cfg.n_layers), "shared": kv(groups)}
+    raise ValueError(cfg.block)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    return init_tree(cache_defs(cfg, batch, max_len), jax.random.PRNGKey(0), dtype)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int):
+    return spec_tree(cache_defs(cfg, batch, max_len))
+
+
+def cache_shapes(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    return shape_tree(cache_defs(cfg, batch, max_len), dtype)
+
+
+# ---------------------------------------------------------------- decode
+
+
+def _attn_block_decode(p, x, ck, cv, pos, cfg):
+    h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    h, ck, cv = L.attention_decode(p["attn"], h, ck, cv, pos, cfg)
+    x = x + h
+    key = "moe" if "moe" in p else "ffn"
+    fn = L.moe_apply if key == "moe" else L.ffn_apply
+    x = x + fn(p[key], L.rmsnorm(p["ln2"], x, cfg.norm_eps), cfg)
+    return x, ck, cv
+
+
+def _mamba_block_decode(p, x, st, cfg):
+    h = L.rmsnorm(p["ln"], x, cfg.norm_eps)
+    h, st = L.mamba_decode(p["mamba"], h, st, cfg)
+    return x + h, st
+
+
+def decode_step(params, cache, cfg: ModelConfig, tokens, pos,
+                dtype=jnp.bfloat16):
+    """One decode step.  tokens [B,1] int32; pos scalar int32 (current length).
+    Returns (logits [B,1,V], new_cache)."""
+    params = _cast_params(params, dtype)
+    x = params["embed"].astype(dtype)[tokens]
+    x = shard(x, ("batch", None, "embed"))
+
+    if cfg.block in ("attn", "moe"):
+        def body(h, xs):
+            lp, ck, cv = xs
+            h, ck, cv = _attn_block_decode(lp, h, ck, cv, pos, cfg)
+            return h, (ck, cv)
+
+        x, (nk, nv) = jax.lax.scan(body, x,
+                                   (params["layers"], cache["k"], cache["v"]))
+        cache = {"k": nk, "v": nv}
+    elif cfg.block == "mamba":
+        def body(h, xs):
+            lp, st = xs
+            h, st = _mamba_block_decode(lp, h,
+                                        (st["conv_x"], st["conv_b"],
+                                         st["conv_c"], st["ssm"]), cfg)
+            return h, {"conv_x": st[0], "conv_b": st[1],
+                       "conv_c": st[2], "ssm": st[3]}
+
+        x, cache = jax.lax.scan(body, x, (params["layers"], cache))
+    elif cfg.block == "zamba":
+        k = cfg.shared_attn_every
+        groups = cfg.n_layers // k
+        grouped = jax.tree.map(
+            lambda a: a.reshape((groups, k) + a.shape[1:]), params["layers"]
+        )
+        mcache = jax.tree.map(
+            lambda a: a.reshape((groups, k) + a.shape[1:]), cache["mamba"]
+        )
+
+        def group_body(h, xs):
+            gp, gst, ck, cv = xs
+
+            def inner(hh, ys):
+                lp, st = ys
+                hh, st = _mamba_block_decode(
+                    lp, hh, (st["conv_x"], st["conv_b"], st["conv_c"],
+                             st["ssm"]), cfg)
+                return hh, {"conv_x": st[0], "conv_b": st[1],
+                            "conv_c": st[2], "ssm": st[3]}
+
+            h, gst = jax.lax.scan(inner, h, (gp, gst))
+            hh = L.rmsnorm(params["shared"]["ln1"], h, cfg.norm_eps)
+            hh, ck, cv = L.attention_decode(params["shared"]["attn"], hh,
+                                            ck, cv, pos, cfg)
+            h = h + hh
+            h = h + L.ffn_apply(params["shared"]["ffn"],
+                                L.rmsnorm(params["shared"]["ln2"], h,
+                                          cfg.norm_eps), cfg)
+            return h, (gst, ck, cv)
+
+        x, (mcache, nk, nv) = jax.lax.scan(
+            group_body, x,
+            (grouped, mcache, cache["shared"]["k"], cache["shared"]["v"]))
+        cache = {
+            "mamba": jax.tree.map(
+                lambda a: a.reshape((cfg.n_layers,) + a.shape[2:]), mcache),
+            "shared": {"k": nk, "v": nv},
+        }
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["head"].astype(dtype))
+    return logits, cache

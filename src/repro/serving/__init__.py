@@ -1,0 +1,4 @@
+"""Serving substrate: continuous batching + AdapTBF admission."""
+from repro.serving.engine import Request, ServingEngine
+
+__all__ = ["Request", "ServingEngine"]

@@ -1,0 +1,27 @@
+"""Storage substrate: discrete-time OST simulator, paper workload scenarios,
+and the AdapTBF I/O control plane for the framework's own traffic."""
+from repro.storage.controller import RPC_BYTES, AdapTBFController
+from repro.storage.simulator import SimConfig, SimResult, simulate, utilization
+from repro.storage.workloads import (
+    Scenario,
+    continuous,
+    periodic_bursts,
+    scenario_allocation,
+    scenario_recompensation,
+    scenario_redistribution,
+)
+
+__all__ = [
+    "AdapTBFController",
+    "RPC_BYTES",
+    "SimConfig",
+    "SimResult",
+    "simulate",
+    "utilization",
+    "Scenario",
+    "continuous",
+    "periodic_bursts",
+    "scenario_allocation",
+    "scenario_redistribution",
+    "scenario_recompensation",
+]

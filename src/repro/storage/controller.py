@@ -1,0 +1,131 @@
+"""AdapTBF I/O control plane for the framework's own storage traffic.
+
+The training/serving framework is itself an "HPC application": checkpoint
+writers, data-pipeline readers and serving request classes compete for
+storage-target bandwidth.  Each target runs the paper's decentralized
+allocator (`core.fleet_allocate` / the Pallas kernel at fleet scale); this
+controller is the thin host-side shim that meters byte streams into 1 MB-RPC
+tokens, accumulates per-window demand, and paces callers against their
+allocated budgets (Lustre-fallback semantics for jobs the allocator has not
+ruled yet).
+
+Time is injectable so tests run on a virtual clock.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable, Dict, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fleet_allocate
+from repro.core.state import init_fleet_state
+
+RPC_BYTES = 1 << 20  # 1 token = 1 RPC = 1 MB
+
+
+class AdapTBFController:
+    def __init__(
+        self,
+        n_targets: int = 4,
+        capacity_rpc_per_s: float = 2000.0,
+        window_s: float = 0.1,
+        u_max: float = 64.0,
+        max_jobs: int = 16,
+        time_fn: Callable[[], float] = time.monotonic,
+        sleep_fn: Callable[[float], None] = time.sleep,
+    ):
+        self.n_targets = n_targets
+        self.window_s = window_s
+        self.capacity = capacity_rpc_per_s * window_s  # tokens per window
+        self.u_max = u_max
+        self._time, self._sleep = time_fn, sleep_fn
+        self._lock = threading.RLock()
+        self._jobs: Dict[str, int] = {}
+        self._nodes = np.zeros(max_jobs, np.float32)
+        self._state = init_fleet_state(n_targets, max_jobs)
+        self._demand = np.zeros((n_targets, max_jobs), np.float32)
+        self._consumed = np.zeros((n_targets, max_jobs), np.float32)
+        # fallback semantics: unruled jobs are unlimited until first window
+        self._budget = np.full((n_targets, max_jobs), np.inf, np.float32)
+        self._window_end = self._time() + window_s
+        self.windows_run = 0
+
+    # ------------------------------------------------------------- jobs
+
+    def register_job(self, name: str, nodes: float) -> int:
+        with self._lock:
+            if name in self._jobs:
+                return self._jobs[name]
+            idx = len(self._jobs)
+            if idx >= self._nodes.shape[0]:
+                raise ValueError("max_jobs exceeded")
+            self._jobs[name] = idx
+            self._nodes[idx] = nodes
+            return idx
+
+    # ----------------------------------------------------------- control
+
+    def _roll_window(self):
+        """Run the decentralized allocation for every target (paper's
+        per-OST token allocation) and reset window accounting."""
+        state, alloc = fleet_allocate(
+            self._state,
+            jnp.asarray(self._demand),
+            jnp.asarray(self._nodes),
+            self.capacity,
+            u_max=self.u_max,
+        )
+        self._state = state
+        alloc = np.asarray(alloc)
+        # jobs with no allocation fall back to opportunistic service
+        self._budget = np.where(alloc > 0, alloc, np.inf)
+        self._demand[:] = 0.0
+        self._consumed[:] = 0.0
+        self._window_end = self._time() + self.window_s
+        self.windows_run += 1
+
+    def _maybe_roll(self):
+        if self._time() >= self._window_end:
+            self._roll_window()
+
+    def request(self, job: str, nbytes: int, target: Optional[int] = None):
+        """Meter ``nbytes`` of I/O for ``job``; blocks (sleeps) until budget
+        admits it.  Striping: chunks pick targets round-robin by default."""
+        idx = self._jobs[job]
+        tokens = max(1, int(np.ceil(nbytes / RPC_BYTES)))
+        t = (hash((job, self.windows_run)) if target is None else target) \
+            % self.n_targets
+        with self._lock:
+            self._maybe_roll()
+            self._demand[t, idx] += tokens
+            while self._consumed[t, idx] + tokens > self._budget[t, idx]:
+                wait = max(self._window_end - self._time(), 1e-4)
+                self._sleep(wait)
+                self._maybe_roll()
+            self._consumed[t, idx] += tokens
+        return t
+
+    def try_consume(self, job: str, tokens: float, target: int = 0) -> bool:
+        """Non-blocking budget check-and-consume (serving admission)."""
+        idx = self._jobs[job]
+        with self._lock:
+            self._maybe_roll()
+            self._demand[target, idx] += tokens
+            if self._consumed[target, idx] + tokens > self._budget[target, idx]:
+                return False
+            self._consumed[target, idx] += tokens
+            return True
+
+    def budget_of(self, job: str) -> np.ndarray:
+        """Current per-target window budget for a job (inf = fallback)."""
+        idx = self._jobs[job]
+        with self._lock:
+            self._maybe_roll()
+            return self._budget[:, idx].copy()
+
+    def records_of(self, job: str) -> np.ndarray:
+        idx = self._jobs[job]
+        return np.asarray(self._state.record)[:, idx]

@@ -1,0 +1,173 @@
+"""Discrete-time storage-target simulator (replaces the paper's CloudLab/Lustre
+testbed; DESIGN.md section 2 "hardware adaptation").
+
+Model
+-----
+* time advances in ticks (default 10 ms); an observation window is
+  ``window_ticks`` ticks (default 10 -> 100 ms, the paper's chosen frequency).
+* 1 token = 1 RPC = 1 MB bulk I/O (paper: "1RPC=1Token", Lustre 1 MB bulk).
+* each job issues RPCs into its server-side queue according to a rate trace,
+  bounded by its remaining volume (closed loop) and a client-side
+  max-RPCs-in-flight backlog cap (~16 per process, Lustre default).
+* the OST serves at most ``capacity_per_tick`` RPCs per tick, in two phases
+  mirroring the Lustre NRS TBF semantics (paper Section II-A / III-D):
+    1. *ruled* jobs (finite token budget) dequeue up to their remaining window
+       budget; when gated wants exceed disk capacity, service is scaled
+       proportionally (approximating the deadline-heap fairness).  Unused
+       gated capacity is NOT given to other ruled jobs -- plain TBF is
+       non-work-conserving; fixing that at the allocator level is AdapTBF's
+       entire point.
+    2. *unruled* jobs (no rule / rule stopped -> infinite budget) form the
+       fallback queue: they are served opportunistically from whatever
+       capacity phase 1 left idle.
+* control modes: ``adaptbf`` (rules = allocator output; zero-allocation jobs
+  have their rule stopped -> fallback), ``static`` (fixed rules for every job,
+  never stopped), ``nobw`` (no rules at all -> everything fallback, i.e.
+  backlog-proportional FCFS).
+
+The whole simulation is a ``lax.scan`` over windows with an inner scan over
+ticks -- jittable end to end.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import adaptbf, baselines
+from repro.core.state import init_state
+
+_EPS = 1e-9
+
+
+class SimConfig(NamedTuple):
+    capacity_per_tick: float = 20.0    # RPCs/tick the OST can serve (2000/s @10 ms)
+    window_ticks: int = 10             # observation window length in ticks
+    tick_seconds: float = 0.01
+    control: str = "adaptbf"           # adaptbf | static | nobw
+    u_max: float = 64.0
+    integer_tokens: bool = True
+    max_backlog: float = 256.0         # default client in-flight cap per job
+
+
+class SimResult(NamedTuple):
+    served: jnp.ndarray        # [n_windows, J] RPCs served per window per job
+    demand: jnp.ndarray        # [n_windows, J] RPCs issued per window (d_x)
+    alloc: jnp.ndarray         # [n_windows, J] token budget applied that window
+    record: jnp.ndarray        # [n_windows, J] lend/borrow record after window
+    queue_final: jnp.ndarray   # [J]
+    window_seconds: float
+
+    @property
+    def throughput_mb_s(self):
+        """[n_windows, J] MB/s assuming 1 RPC = 1 MB."""
+        return self.served / self.window_seconds
+
+
+def _window_capacity(cfg: SimConfig) -> float:
+    return cfg.capacity_per_tick * cfg.window_ticks
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def simulate(
+    cfg: SimConfig,
+    nodes: jnp.ndarray,
+    issue_rate: jnp.ndarray,
+    volume: jnp.ndarray,
+    max_backlog: Optional[jnp.ndarray] = None,
+) -> SimResult:
+    """Simulate one storage target.
+
+    Args:
+      cfg: SimConfig (static arg -> one compilation per control mode).
+      nodes: [J] compute nodes per job (priorities derive from these).
+      issue_rate: [T, J] client issue attempts (RPCs per tick).
+      volume: [J] total RPCs each job will ever issue (inf = unbounded).
+      max_backlog: optional [J] per-job client in-flight cap (defaults to
+        cfg.max_backlog for every job).
+    """
+    t_total, n_jobs = issue_rate.shape
+    n_windows = t_total // cfg.window_ticks
+    rates = issue_rate[: n_windows * cfg.window_ticks].reshape(
+        n_windows, cfg.window_ticks, n_jobs
+    )
+    cap_w = _window_capacity(cfg)
+    nodes = jnp.asarray(nodes, jnp.float32)
+    if max_backlog is None:
+        backlog_cap = jnp.full((n_jobs,), cfg.max_backlog, jnp.float32)
+    else:
+        backlog_cap = jnp.asarray(max_backlog, jnp.float32)
+
+    static_alloc = baselines.static_allocate(nodes, cap_w)
+    unruled = jnp.full((n_jobs,), jnp.inf, jnp.float32)
+
+    def tick_fn(carry, rate_t):
+        queue, vol_left, budget = carry
+        headroom = jnp.maximum(backlog_cap - queue, 0.0)
+        issued = jnp.minimum(jnp.minimum(rate_t, vol_left), headroom)
+        queue = queue + issued
+        vol_left = vol_left - issued
+        queue = jnp.maximum(queue, 0.0)  # fp guard
+        ruled = jnp.isfinite(budget)
+        # phase 1: token-gated service for ruled jobs
+        want1 = jnp.where(ruled, jnp.minimum(queue, jnp.maximum(budget, 0.0)), 0.0)
+        s1 = want1 * jnp.minimum(
+            1.0, cfg.capacity_per_tick / jnp.maximum(want1.sum(), _EPS)
+        )
+        # phase 2: fallback queue served from idle capacity only
+        spare = jnp.maximum(cfg.capacity_per_tick - s1.sum(), 0.0)
+        want2 = jnp.where(ruled, 0.0, queue)
+        s2 = want2 * jnp.minimum(1.0, spare / jnp.maximum(want2.sum(), _EPS))
+        served = s1 + s2
+        queue = queue - served
+        budget = budget - served  # inf stays inf for unruled jobs
+        return (queue, vol_left, budget), (served, issued)
+
+    def window_fn(carry, rates_w):
+        queue, vol_left, astate, alloc = carry
+        budget0 = jnp.where(alloc > 0, alloc, jnp.inf) if cfg.control == "adaptbf" \
+            else alloc
+        (queue, vol_left, _), (served_t, issued_t) = jax.lax.scan(
+            tick_fn, (queue, vol_left, budget0), rates_w
+        )
+        demand = issued_t.sum(axis=0)
+        if cfg.control == "adaptbf":
+            astate, alloc_next = adaptbf.allocate(
+                astate, demand, nodes, cap_w,
+                u_max=cfg.u_max, integer_tokens=cfg.integer_tokens,
+            )
+        elif cfg.control == "static":
+            alloc_next = static_alloc
+        else:  # nobw
+            alloc_next = unruled
+        out = (served_t.sum(axis=0), demand, alloc, astate.record)
+        return (queue, vol_left, astate, alloc_next), out
+
+    astate0 = init_state(n_jobs)
+    # window 0: no rules exist yet -> everything is fallback for adaptbf/nobw;
+    # static rules apply from t=0.
+    alloc0 = static_alloc if cfg.control == "static" else unruled
+    carry0 = (
+        jnp.zeros(n_jobs, jnp.float32),
+        jnp.asarray(volume, jnp.float32),
+        astate0,
+        alloc0,
+    )
+    (queue, _, _, _), (served, demand, alloc, record) = jax.lax.scan(
+        window_fn, carry0, rates
+    )
+    return SimResult(
+        served=served,
+        demand=demand,
+        alloc=alloc,
+        record=record,
+        queue_final=queue,
+        window_seconds=cfg.window_ticks * cfg.tick_seconds,
+    )
+
+
+def utilization(result: SimResult, cfg: SimConfig) -> jnp.ndarray:
+    """Per-window fraction of disk capacity actually used."""
+    return result.served.sum(axis=-1) / _window_capacity(cfg)

@@ -1,0 +1,118 @@
+"""Synthetic workload generators modeled after the paper's Filebench scenarios
+(Sections IV-D, IV-E, IV-F).  All builders return a ``Scenario`` suitable for
+``storage.simulator.simulate``.
+
+Scaling: 1 RPC = 1 MB.  A 16-process x 1 GB file-per-process job is 16384 RPCs
+of total volume; client aggregate issue capability is the NIC-side bound
+(>= OST capacity, so continuous jobs can saturate the target).  The per-job
+client backlog cap models Lustre ``max_rpcs_in_flight`` (~16) x processes.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+
+GB_RPCS = 1024          # RPCs per 1 GB file at 1 MB per RPC
+IN_FLIGHT_PER_PROC = 16  # Lustre client max_rpcs_in_flight
+
+
+class Scenario(NamedTuple):
+    name: str
+    nodes: np.ndarray        # [J] compute nodes (priorities)
+    issue_rate: np.ndarray   # [T, J] RPCs/tick
+    volume: np.ndarray       # [J] total RPCs (inf = unbounded)
+    max_backlog: np.ndarray  # [J] client in-flight cap
+    duration_s: float
+    tick_seconds: float = 0.01
+
+
+def continuous(t_ticks: int, rate: float, start_tick: int = 0) -> np.ndarray:
+    out = np.zeros(t_ticks, np.float32)
+    out[start_tick:] = rate
+    return out
+
+
+def periodic_bursts(
+    t_ticks: int,
+    burst_rpcs: float,
+    interval_ticks: int,
+    burst_ticks: int = 2,
+    start_tick: int = 0,
+) -> np.ndarray:
+    """Short I/O bursts of ``burst_rpcs`` spread over ``burst_ticks`` ticks,
+    repeating every ``interval_ticks``."""
+    out = np.zeros(t_ticks, np.float32)
+    per_tick = burst_rpcs / burst_ticks
+    for t0 in range(start_tick, t_ticks, interval_ticks):
+        out[t0 : t0 + burst_ticks] += per_tick
+    return out
+
+
+def scenario_allocation(duration_s: float = 60.0, tick_s: float = 0.01) -> Scenario:
+    """Section IV-D: four identical continuous jobs (16 procs x 1 GB each) with
+    priorities 10/10/30/50%; higher priority jobs finish earlier, so the active
+    set shrinks over time."""
+    t = int(duration_s / tick_s)
+    nodes = np.array([10, 10, 30, 50], np.float32)
+    client_rate = 40.0  # RPCs/tick aggregate per job (4 GB/s NIC-bound)
+    issue = np.stack([continuous(t, client_rate) for _ in range(4)], axis=1)
+    volume = np.full(4, 16 * GB_RPCS, np.float32)
+    backlog = np.full(4, 16 * IN_FLIGHT_PER_PROC, np.float32)
+    return Scenario("allocation_ivd", nodes, issue, volume, backlog, duration_s, tick_s)
+
+
+def scenario_redistribution(duration_s: float = 60.0, tick_s: float = 0.01) -> Scenario:
+    """Section IV-E: three high-priority (30% each) bursty jobs (2 procs x 1 GB)
+    with different burst magnitudes/intervals + one low-priority (10%)
+    continuous 16-proc job."""
+    t = int(duration_s / tick_s)
+    nodes = np.array([30, 30, 30, 10], np.float32)
+    issue = np.stack(
+        [
+            periodic_bursts(t, burst_rpcs=300, interval_ticks=500, start_tick=100),
+            periodic_bursts(t, burst_rpcs=420, interval_ticks=700, start_tick=250),
+            periodic_bursts(t, burst_rpcs=180, interval_ticks=300, start_tick=50),
+            continuous(t, rate=40.0),
+        ],
+        axis=1,
+    )
+    volume = np.array(
+        [2 * GB_RPCS, 2 * GB_RPCS, 2 * GB_RPCS, 64 * GB_RPCS], np.float32
+    )
+    backlog = np.array([64, 64, 64, 16 * IN_FLIGHT_PER_PROC], np.float32)
+    return Scenario(
+        "redistribution_ive", nodes, issue, volume, backlog, duration_s, tick_s
+    )
+
+
+def scenario_recompensation(duration_s: float = 120.0, tick_s: float = 0.01) -> Scenario:
+    """Section IV-F: equal priorities (25% each).  Jobs 1-3: one process does
+    small constant-interval bursts; a second process starts continuous I/O
+    after 20/50/80 s.  Job 4 is continuous from t=0."""
+    t = int(duration_s / tick_s)
+    nodes = np.array([25, 25, 25, 25], np.float32)
+
+    def job(delay_s: float, burst: float, interval: int):
+        # small bursts at constant (sub-second) intervals: the job is active
+        # with low demand nearly every observation window -> it lends tokens
+        bursty = periodic_bursts(t, burst_rpcs=burst, interval_ticks=interval,
+                                 burst_ticks=1)
+        cont = continuous(t, rate=20.0, start_tick=int(delay_s / tick_s))
+        return bursty + cont
+
+    issue = np.stack(
+        [
+            job(20.0, burst=30, interval=10),
+            job(50.0, burst=24, interval=12),
+            job(80.0, burst=15, interval=15),
+            continuous(t, rate=40.0),
+        ],
+        axis=1,
+    )
+    # continuous streams run through the whole experiment
+    volume = np.full(4, np.inf, np.float32)
+    backlog = np.array([32, 32, 32, 16 * IN_FLIGHT_PER_PROC], np.float32)
+    return Scenario(
+        "recompensation_ivf", nodes, issue, volume, backlog, duration_s, tick_s
+    )

@@ -1,0 +1,4 @@
+"""Training loop substrate."""
+from repro.training.trainer import Trainer, compress_grads, stochastic_round_bf16
+
+__all__ = ["Trainer", "compress_grads", "stochastic_round_bf16"]

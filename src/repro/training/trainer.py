@@ -1,0 +1,122 @@
+"""Fault-tolerant training loop.
+
+* checkpoint/restart: restores the latest checkpoint on construction, saves
+  asynchronously every ``ckpt_every`` steps (writes paced by AdapTBF).
+* determinism contract: synthetic pipeline batches are pure functions of the
+  step, so crash -> restore -> continue reproduces the uninterrupted run
+  bit-for-bit (tested).
+* optional gradient compression: stochastic-rounding bf16 cast of gradients
+  before the optimizer (halves gradient all-reduce bytes on real meshes).
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.manager import (AsyncCheckpointer, latest_step,
+                                      restore_checkpoint, save_checkpoint)
+from repro.data.pipeline import TokenPipeline
+from repro.launch.steps import TrainState, init_train_state, make_train_step
+from repro.models.common import ModelConfig
+
+
+def stochastic_round_bf16(x: jnp.ndarray, key) -> jnp.ndarray:
+    """f32 -> bf16 with stochastic rounding (unbiased; add uniform 16-bit
+    noise below the bf16 mantissa, then truncate)."""
+    bits = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)
+    noise = jax.random.bits(key, x.shape, jnp.uint32) & jnp.uint32(0xFFFF)
+    bits = (bits + noise) & jnp.uint32(0xFFFF0000)
+    return jax.lax.bitcast_convert_type(bits, jnp.float32).astype(jnp.bfloat16)
+
+
+def compress_grads(grads, step):
+    leaves, treedef = jax.tree.flatten(grads)
+    keys = jax.random.split(jax.random.fold_in(jax.random.PRNGKey(17), step),
+                            len(leaves))
+    out = [stochastic_round_bf16(g, k).astype(g.dtype)
+           for g, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, out)
+
+
+class Trainer:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        *,
+        ckpt_dir: str,
+        data: Optional[TokenPipeline] = None,
+        global_batch: int = 8,
+        seq_len: int = 128,
+        microbatches: int = 1,
+        ckpt_every: int = 50,
+        keep_ckpts: int = 3,
+        controller=None,
+        grad_compression: str = "none",   # none | bf16_sr
+        compute_dtype=jnp.float32,
+        seed: int = 0,
+        **hyper,
+    ):
+        self.cfg = cfg
+        self.ckpt_dir = ckpt_dir
+        self.ckpt_every = ckpt_every
+        self.data = data or TokenPipeline(cfg.vocab, seq_len, global_batch,
+                                          controller=controller)
+        if controller is not None:
+            controller.register_job("checkpoint", nodes=1)
+        base_step = make_train_step(cfg, microbatches=microbatches,
+                                    compute_dtype=compute_dtype, **hyper)
+        self._grad_compression = grad_compression
+        self._hyper = hyper
+        self._compute_dtype = compute_dtype
+        self._step_fn = jax.jit(self._wrap(base_step), donate_argnums=0)
+
+        self.state = init_train_state(cfg, jax.random.PRNGKey(seed))
+        self.step = 0
+        if latest_step(ckpt_dir) is not None:
+            self.state, self.step = restore_checkpoint(ckpt_dir, self.state)
+        self._ckpt = AsyncCheckpointer(ckpt_dir, controller=controller,
+                                       keep=keep_ckpts)
+
+    def _wrap(self, base_step):
+        if self._grad_compression != "bf16_sr":
+            return base_step
+        from repro import models
+        from repro.optim import adamw_update
+
+        cfg = self.cfg
+
+        hyper = self._hyper
+        dtype = self._compute_dtype
+
+        def step_fn(state: TrainState, batch):
+            loss, grads = jax.value_and_grad(
+                lambda p: models.loss_fn(p, cfg, batch,
+                                         dtype=dtype))(state.params)
+            grads = compress_grads(grads, state.opt.step)
+            new_params, opt, metrics = adamw_update(grads, state.opt,
+                                                    state.params, **hyper)
+            metrics["loss"] = loss
+            return TrainState(new_params, opt), metrics
+
+        return step_fn
+
+    def run(self, n_steps: int) -> List[Dict[str, float]]:
+        history = []
+        for _ in range(n_steps):
+            batch = self.data.batch(self.step)
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            self.state, metrics = self._step_fn(self.state, batch)
+            self.step += 1
+            history.append({k: float(v) for k, v in metrics.items()})
+            if self.step % self.ckpt_every == 0:
+                self._ckpt.submit(self.state, self.step)
+        return history
+
+    def save_now(self):
+        return save_checkpoint(self.ckpt_dir, self.state, self.step)
+
+    def close(self):
+        self._ckpt.close()

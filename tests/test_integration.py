@@ -1,0 +1,192 @@
+"""End-to-end integration tests: trainer fault tolerance, AdapTBF-paced
+checkpoint/data I/O, serving engine with admission control."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import models
+from repro.configs import get_smoke_config
+from repro.data import TokenPipeline
+from repro.serving import Request, ServingEngine
+from repro.storage import AdapTBFController
+from repro.training import Trainer
+
+CFG = dataclasses.replace(get_smoke_config("phi3-mini-3.8b"), n_layers=2)
+
+
+class VirtualClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def time(self):
+        return self.t
+
+    def sleep(self, dt):
+        self.t += dt
+
+
+# ------------------------------------------------------------------ trainer
+
+
+def test_train_loss_decreases(tmp_path):
+    tr = Trainer(CFG, ckpt_dir=str(tmp_path / "ckpt"), global_batch=4,
+                 seq_len=32, ckpt_every=1000, lr=1e-2, warmup=5)
+    hist = tr.run(30)
+    first = np.mean([h["loss"] for h in hist[:5]])
+    last = np.mean([h["loss"] for h in hist[-5:]])
+    assert last < first - 0.1, (first, last)
+    tr.close()
+
+
+def test_checkpoint_restart_is_bitwise(tmp_path):
+    """Crash/restore must reproduce the uninterrupted run exactly."""
+    kw = dict(global_batch=4, seq_len=32, ckpt_every=1000, lr=1e-3)
+    ref = Trainer(CFG, ckpt_dir=str(tmp_path / "a"), **kw)
+    ref_hist = ref.run(10)
+    ref.close()
+
+    tr1 = Trainer(CFG, ckpt_dir=str(tmp_path / "b"), **kw)
+    tr1.run(5)
+    tr1.save_now()     # synchronous save at step 5
+    tr1.close()
+    del tr1            # "crash"
+
+    tr2 = Trainer(CFG, ckpt_dir=str(tmp_path / "b"), **kw)
+    assert tr2.step == 5  # restored
+    hist2 = tr2.run(5)
+    tr2.close()
+    np.testing.assert_allclose(
+        [h["loss"] for h in hist2],
+        [h["loss"] for h in ref_hist[5:]], rtol=1e-6)
+    # states identical leaf by leaf
+    ref_leaves = jax.tree.leaves(ref.state.params)
+    new_leaves = jax.tree.leaves(tr2.state.params)
+    for a, b in zip(ref_leaves, new_leaves):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_grad_compression_still_learns(tmp_path):
+    tr = Trainer(CFG, ckpt_dir=str(tmp_path / "c"), global_batch=4,
+                 seq_len=32, ckpt_every=1000, grad_compression="bf16_sr",
+                 lr=1e-2, warmup=5)
+    hist = tr.run(30)
+    first = np.mean([h["loss"] for h in hist[:5]])
+    last = np.mean([h["loss"] for h in hist[-5:]])
+    assert last < first - 0.1, (first, last)
+    tr.close()
+
+
+def test_elastic_restore_with_shardings(tmp_path):
+    """Checkpoints are mesh-agnostic: restore with explicit (trivial)
+    shardings -- the same path a grown/shrunk cluster uses."""
+    from repro.checkpoint import restore_checkpoint, save_checkpoint
+    params = models.init_params(CFG, jax.random.PRNGKey(0))
+    save_checkpoint(str(tmp_path / "e"), {"params": params}, step=7)
+    mesh = jax.make_mesh((1,), ("data",))
+    sh = jax.tree.map(
+        lambda _: jax.sharding.NamedSharding(
+            mesh, jax.sharding.PartitionSpec()), params)
+    restored, step = restore_checkpoint(str(tmp_path / "e"),
+                                        {"params": params},
+                                        shardings={"params": sh})
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(params),
+                    jax.tree.leaves(restored["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------- controller
+
+
+def test_controller_paces_competing_jobs():
+    """Two jobs hammer the same targets; budgets converge toward the node
+    share and the virtual clock advances (i.e. the hog was throttled)."""
+    clk = VirtualClock()
+    ctl = AdapTBFController(n_targets=2, capacity_rpc_per_s=1000,
+                            time_fn=clk.time, sleep_fn=clk.sleep)
+    ctl.register_job("big", nodes=30)
+    ctl.register_job("small", nodes=10)
+    big = small = 0.0
+    for _ in range(600):
+        clk.sleep(0.004)                          # wall time between chunks
+        ctl.request("big", 8 << 20, target=0)     # 8 MB chunks (hog)
+        ctl.request("small", 1 << 20, target=0)
+        big += 8
+        small += 1
+    assert ctl.windows_run > 3                    # windows actually rolled
+    # once both jobs are ruled, the hog's budget reflects its 3x priority,
+    # not its 8x demand: the budgets must be finite and priority-ordered
+    b_big = ctl.budget_of("big")[0]
+    b_small = ctl.budget_of("small")[0]
+    assert np.isfinite(b_big) and b_big > b_small
+    rec = ctl.records_of("small")
+    assert np.isfinite(rec).all()
+
+
+def test_pipeline_determinism_and_sharding():
+    p0 = TokenPipeline(vocab=100, seq_len=16, global_batch=8, n_hosts=2,
+                       host_id=0)
+    p1 = TokenPipeline(vocab=100, seq_len=16, global_batch=8, n_hosts=2,
+                       host_id=1)
+    a, b = p0.batch(3), p0.batch(3)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])  # deterministic
+    assert not np.array_equal(p0.batch(3)["tokens"], p1.batch(3)["tokens"])
+    assert a["tokens"].shape == (4, 16)
+    np.testing.assert_array_equal(a["tokens"][:, 1:], a["labels"][:, :-1])
+
+
+# ------------------------------------------------------------------ serving
+
+
+def _greedy_reference(cfg, params, prompt, n_new):
+    cache = models.init_cache(cfg, 1, 64, dtype=jnp.float32)
+    toks = list(prompt)
+    out = []
+    cur = prompt[0]
+    for t in range(len(prompt) + n_new - 1):
+        logits, cache = models.decode_step(
+            params, cache, cfg, jnp.asarray([[cur]], jnp.int32), t,
+            dtype=jnp.float32)
+        nxt = int(jnp.argmax(logits[0, -1]))
+        if t + 1 < len(prompt):
+            cur = toks[t + 1]
+        else:
+            out.append(nxt)
+            cur = nxt
+    return out
+
+
+def test_engine_matches_sequential_decode():
+    cfg = CFG
+    params = models.init_params(cfg, jax.random.PRNGKey(1))
+    eng = ServingEngine(cfg, params, slots=3, max_len=64)
+    reqs = [Request(prompt=[5, 9, 2], max_new_tokens=4),
+            Request(prompt=[7, 1], max_new_tokens=5, klass="batch"),
+            Request(prompt=[3], max_new_tokens=3)]
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run_until_drained()
+    assert len(done) == 3 and all(r.done for r in done)
+    for r in reqs:
+        want = _greedy_reference(cfg, params, r.prompt, r.max_new_tokens)
+        assert r.output == want, (r.output, want)
+
+
+def test_engine_admission_respects_class_budget():
+    """With a tiny controller budget, low-priority 'batch' requests are
+    admitted later than interactive ones."""
+    cfg = CFG
+    params = models.init_params(cfg, jax.random.PRNGKey(1))
+    clk = VirtualClock()
+    ctl = AdapTBFController(n_targets=1, capacity_rpc_per_s=100,
+                            window_s=0.1, time_fn=clk.time,
+                            sleep_fn=clk.sleep)
+    eng = ServingEngine(cfg, params, slots=2, max_len=64, controller=ctl,
+                        classes={"interactive": 3.0, "batch": 1.0})
+    eng.submit(Request(prompt=[1, 2], max_new_tokens=3))
+    eng.submit(Request(prompt=[3, 4], max_new_tokens=3, klass="batch"))
+    done = eng.run_until_drained(max_steps=200)
+    assert len(done) == 2

@@ -1,0 +1,153 @@
+"""Correctness tests for the performance features used in EXPERIMENTS.md
+section Perf: sqrt-remat, sequence parallelism, context-parallel decode,
+fused MoE projections, gradient compression, and the roofline extraction
+machinery (loop-trip attribution, collective byte model)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import models
+from repro.configs import get_smoke_config
+from repro.launch.roofline import (_split_computations, _trip_counts,
+                                   analytic_cost, collective_stats)
+from repro.configs.shapes import SHAPES
+
+
+def _batch(cfg, b=2, s=32, seed=1):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    return {"tokens": jax.random.randint(k1, (b, s), 0, cfg.vocab),
+            "labels": jax.random.randint(k2, (b, s), 0, cfg.vocab)}
+
+
+@pytest.mark.parametrize("arch", ["phi3-mini-3.8b", "moonshot-v1-16b-a3b"])
+def test_sqrt_remat_is_exact(arch):
+    """remat_group must not change loss or gradients at all."""
+    cfg0 = dataclasses.replace(get_smoke_config(arch), n_layers=4)
+    cfg1 = dataclasses.replace(cfg0, remat_group=2)
+    params = models.init_params(cfg0, jax.random.PRNGKey(0))
+    batch = _batch(cfg0)
+    l0, g0 = jax.value_and_grad(models.loss_fn)(params, cfg0, batch,
+                                                dtype=jnp.float32)
+    l1, g1 = jax.value_and_grad(models.loss_fn)(params, cfg1, batch,
+                                                dtype=jnp.float32)
+    assert float(l0) == float(l1)
+    for a, b_ in zip(jax.tree.leaves(g0), jax.tree.leaves(g1)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b_))
+
+
+def test_sequence_parallel_flag_is_exact():
+    cfg0 = get_smoke_config("phi3-mini-3.8b")
+    cfg1 = dataclasses.replace(cfg0, sequence_parallel=True)
+    params = models.init_params(cfg0, jax.random.PRNGKey(0))
+    batch = _batch(cfg0)
+    l0 = models.loss_fn(params, cfg0, batch, dtype=jnp.float32)
+    l1 = models.loss_fn(params, cfg1, batch, dtype=jnp.float32)
+    assert float(l0) == float(l1)
+
+
+def test_context_parallel_decode_flag_is_exact():
+    cfg0 = get_smoke_config("phi3-medium-14b")
+    cfg1 = dataclasses.replace(cfg0, seq_shard_decode_cache=True)
+    params = models.init_params(cfg0, jax.random.PRNGKey(0))
+    tok = jnp.asarray([[3], [7]], jnp.int32)
+    c0 = models.init_cache(cfg0, 2, 16, dtype=jnp.float32)
+    c1 = models.init_cache(cfg1, 2, 16, dtype=jnp.float32)
+    l0, _ = models.decode_step(params, c0, cfg0, tok, 0, dtype=jnp.float32)
+    l1, _ = models.decode_step(params, c1, cfg1, tok, 0, dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(l0), np.asarray(l1), atol=1e-6)
+
+
+def test_vector_position_decode_matches_scalar():
+    cfg = get_smoke_config("phi3-mini-3.8b")
+    params = models.init_params(cfg, jax.random.PRNGKey(0))
+    tok = jnp.asarray([[3], [7]], jnp.int32)
+    ca = models.init_cache(cfg, 2, 16, dtype=jnp.float32)
+    cb = models.init_cache(cfg, 2, 16, dtype=jnp.float32)
+    la, _ = models.decode_step(params, ca, cfg, tok, 0, dtype=jnp.float32)
+    lb, _ = models.decode_step(params, cb, cfg, tok,
+                               jnp.asarray([0, 0], jnp.int32),
+                               dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                               atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------- roofline
+
+SYNTH_HLO = """\
+HloModule test, entry_computation_layout={()->f32[]}
+
+%body_inner (p: (s32[], f32[128,128])) -> (s32[], f32[128,128]) {
+  %ag = f32[128,128]{1,0} all-gather(%x), replica_groups=[4,4]<=[16], dimensions={0}
+  ROOT %t = (s32[], f32[128,128]) tuple(%i, %ag)
+}
+
+%cond_inner (p: (s32[], f32[128,128])) -> pred[] {
+  %c = s32[] constant(5)
+  ROOT %cmp = pred[] compare(%i, %c), direction=LT
+}
+
+%body_outer (p: (s32[], f32[128,128])) -> (s32[], f32[128,128]) {
+  %w = (s32[], f32[128,128]) while(%p), condition=%cond_inner, body=%body_inner
+  %ar = f32[64,64]{1,0} all-reduce(%y), replica_groups={{0,1,2,3}}, to_apply=%add
+  ROOT %t2 = (s32[], f32[128,128]) tuple(%i, %z)
+}
+
+%cond_outer (p: (s32[], f32[128,128])) -> pred[] {
+  %c2 = s32[] constant(3)
+  ROOT %cmp2 = pred[] compare(%i, %c2), direction=LT
+}
+
+ENTRY %main () -> f32[] {
+  %w2 = (s32[], f32[128,128]) while(%p0), condition=%cond_outer, body=%body_outer
+  %ar2 = f32[32]{0} all-reduce(%q), replica_groups={{0,1}}, to_apply=%add
+  ROOT %r = f32[] constant(0)
+}
+"""
+
+
+def test_trip_count_attribution_nested():
+    comps = _split_computations(SYNTH_HLO)
+    mult = _trip_counts(comps)
+    assert mult["body_outer"] == 3.0
+    assert mult["body_inner"] == 15.0      # 3 outer x 5 inner
+    stats = collective_stats(SYNTH_HLO)
+    # all-gather: 15 weighted occurrences of a 64 KiB result over g=4
+    assert stats["all-gather"]["count"] == 15.0
+    np.testing.assert_allclose(stats["all-gather"]["ring_bytes"],
+                               15 * 128 * 128 * 4 * 3 / 4)
+    # inner all-reduce weighted x3 + entry all-reduce x1
+    assert stats["all-reduce"]["count"] == 4.0
+
+
+def test_collective_byte_model():
+    hlo = ('ENTRY %m () -> f32[] {\n'
+           '  %rs = f32[16,16]{1,0} reduce-scatter(%a), '
+           'replica_groups=[2,8]<=[16], to_apply=%add\n'
+           '  ROOT %r = f32[] constant(0)\n}\n')
+    st = collective_stats(hlo)
+    # reduce-scatter result 1 KiB over g=8: operand = 8 KiB, ring = 7 KiB
+    assert st["reduce-scatter"]["operand_bytes"] == 16 * 16 * 4 * 8
+    assert st["reduce-scatter"]["ring_bytes"] == 16 * 16 * 4 * 7
+
+
+def test_analytic_cost_sane():
+    """Analytic FLOPs bracket 6ND: > 6*N*D (attention + remat), < 12*N*D."""
+    from repro.configs import get_config
+    cfg = get_config("phi3-mini-3.8b")
+    shape = SHAPES["train_4k"]
+    c = analytic_cost(cfg, shape, microbatches=4)
+    n, d = cfg.active_param_count(), shape.global_batch * shape.seq_len
+    assert 6 * n * d < c["flops_global"] < 12 * n * d
+    dec = analytic_cost(cfg, SHAPES["decode_32k"], 1)
+    assert dec["flops_global"] < c["flops_global"] / 1000
+
+
+def test_grad_compression_unbiased():
+    from repro.training import stochastic_round_bf16
+    x = jnp.full((200_000,), 1.00390625 / 3)  # not representable in bf16
+    y = stochastic_round_bf16(x, jax.random.PRNGKey(0))
+    # unbiased: mean of rounded values ~ true value
+    assert abs(float(jnp.mean(y.astype(jnp.float32))) - float(x[0])) < 2e-5
