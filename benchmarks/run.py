@@ -6,7 +6,7 @@ from __future__ import annotations
 import json
 import time
 
-from benchmarks import paper_figures, roofline_report
+from benchmarks import fleet_sweep, paper_figures, roofline_report
 
 
 def main() -> None:
@@ -16,6 +16,8 @@ def main() -> None:
         ("ivf_recompensation_fig7_8", paper_figures.fig7_8_recompensation),
         ("ivh_frequency_fig9", paper_figures.fig9_allocation_frequency),
         ("ivg_overhead_scaling", paper_figures.overhead_scaling),
+        ("fleet_scenarios_x_modes_sweep",
+         lambda: fleet_sweep.sweep(duration_s=10.0)),
     ]
     print("name,us_per_call,derived")
     details = {}

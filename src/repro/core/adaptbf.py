@@ -20,6 +20,11 @@ Deviations from the paper (documented in DESIGN.md section 2):
     define utilization for newly-active jobs (alpha^{t-1} = 0).
   * the reclaim amount is additionally clamped to alpha_RD so allocations stay
     non-negative; outstanding debt is repaid over subsequent windows.
+  * re-compensation (Eq. 17-20) is bounded by what the active lenders are
+    still owed: total reclaim is capped at the sum of outstanding lender
+    records, and each lender's compensation is capped at its own record
+    (excess re-shared among lenders with headroom), so a lender's record can
+    never overshoot past zero into artificial debt.
 """
 from __future__ import annotations
 
@@ -95,13 +100,25 @@ def allocate(
     c = jnp.sum(jnp.where(j_plus, c_terms, 0.0))                         # Eq. 13
     reclaim_raw = jnp.minimum(jnp.abs(state.record), jnp.abs(c * alpha_rd))
     reclaim_raw = jnp.minimum(reclaim_raw, alpha_rd)   # non-negativity guard
-    if integer_tokens:
-        reclaim_raw = jnp.floor(reclaim_raw)
     reclaim = jnp.where(j_minus, reclaim_raw, 0.0)                       # Eq. 14
+    # Total reclaim is capped at what the active lenders are still owed: any
+    # excess would over-compensate a lender past zero, flipping it into an
+    # artificial borrower (DESIGN.md deviation 3).
+    owed = jnp.where(j_plus, r_rd, 0.0)
+    t_owed = jnp.sum(owed)
+    reclaim = reclaim * jnp.minimum(1.0, t_owed / jnp.maximum(jnp.sum(reclaim), _EPS))
+    if integer_tokens:
+        reclaim = jnp.floor(reclaim)
     t_r = jnp.sum(reclaim)                                               # Eq. 17
     df_plus = jnp.where(j_plus, df, 0.0)                                 # Eq. 18 (RF = DF)
     share_plus = df_plus / jnp.maximum(jnp.sum(df_plus), _EPS)
-    add_rc, rem = dist(share_plus * t_r, rem, t_r, j_plus)
+    # Per-lender cap at its outstanding record; the excess is re-shared among
+    # lenders that still have headroom (feasible because t_r <= t_owed).
+    add1 = jnp.minimum(share_plus * t_r, owed)
+    headroom = owed - add1
+    leftover = t_r - jnp.sum(add1)
+    add_raw = add1 + leftover * headroom / jnp.maximum(jnp.sum(headroom), _EPS)
+    add_rc, rem = dist(add_raw, rem, t_r, j_plus)
     alpha_rc = alpha_rd - reclaim + add_rc                               # Eq. 15/19
     r_rc = r_rd + reclaim - add_rc                                       # Eq. 16/20
 

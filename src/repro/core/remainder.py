@@ -49,13 +49,16 @@ def integerize(
     delta = jnp.round(budget - jnp.sum(floored))  # integral correction count
 
     neg_inf = jnp.asarray(-jnp.inf, raw.dtype)
-    n = raw.shape[0]
     # leftover: +1 to the largest-remainder masked jobs first (multi-round so
-    # corrections larger than the job count still conserve the budget)
+    # corrections larger than the *masked* job count still conserve the
+    # budget -- masked jobs occupy the leading ranks, so each round hands out
+    # at most one token per masked job)
+    n_masked = jnp.sum(mask.astype(raw.dtype))
     rank_up = rank_desc(jnp.where(mask, rem, neg_inf))
     bump_up = jnp.zeros_like(raw)
     for r in range(3):
-        bump_up = bump_up + jnp.where(mask & (rank_up < delta - r * n), 1.0, 0.0)
+        bump_up = bump_up + jnp.where(mask & (rank_up < delta - r * n_masked),
+                                      1.0, 0.0)
     # excess: -1 from the largest-remainder masked jobs that have >= 1 token
     rank_dn = rank_desc(jnp.where(mask & (floored >= 1.0), rem, neg_inf))
     bump_dn = jnp.where(mask & (floored >= 1.0) & (rank_dn < -delta), 1.0, 0.0)

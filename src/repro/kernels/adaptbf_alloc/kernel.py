@@ -44,11 +44,13 @@ def _integerize(raw, rem, budget, mask):
     delta = jnp.round(budget - jnp.sum(floored, axis=-1, keepdims=True))
 
     neg_inf = jnp.float32(-jnp.inf)
-    n = raw.shape[-1]
+    # multi-round by *masked* count, matching core/remainder.integerize
+    n_masked = jnp.sum(mask.astype(raw.dtype), axis=-1, keepdims=True)
     rank_up = _rank_desc(jnp.where(mask, frac, neg_inf))
     bump_up = jnp.zeros_like(raw)
     for r in range(3):
-        bump_up = bump_up + jnp.where(mask & (rank_up < delta - r * n), 1.0, 0.0)
+        bump_up = bump_up + jnp.where(mask & (rank_up < delta - r * n_masked),
+                                      1.0, 0.0)
     elig = mask & (floored >= 1.0)
     rank_dn = _rank_desc(jnp.where(elig, frac, neg_inf))
     bump_dn = jnp.where(elig & (rank_dn < -delta), 1.0, 0.0)
@@ -88,12 +90,24 @@ def _alloc_block(demand, nodes, record, remainder, alloc_prev, capacity,
     c_terms = p * (jnp.maximum(1.0, u) + jnp.maximum(0.0, 1.0 - u_future)) / 2.0
     c = jnp.sum(jnp.where(j_plus, c_terms, 0.0), axis=-1, keepdims=True)
     reclaim = jnp.minimum(jnp.abs(record), jnp.abs(c * alpha_rd))
-    reclaim = jnp.floor(jnp.minimum(reclaim, alpha_rd))
+    reclaim = jnp.minimum(reclaim, alpha_rd)
     reclaim = jnp.where(j_minus, reclaim, 0.0)
+    # total reclaim capped at what active lenders are owed; per-lender
+    # compensation capped at its record (DESIGN.md deviation 3)
+    owed = jnp.where(j_plus, r_rd, 0.0)
+    t_owed = jnp.sum(owed, axis=-1, keepdims=True)
+    reclaim = reclaim * jnp.minimum(
+        1.0, t_owed / jnp.maximum(jnp.sum(reclaim, axis=-1, keepdims=True), _EPS))
+    reclaim = jnp.floor(reclaim)
     t_r = jnp.sum(reclaim, axis=-1, keepdims=True)
     df_plus = jnp.where(j_plus, df, 0.0)
     share_p = df_plus / jnp.maximum(jnp.sum(df_plus, axis=-1, keepdims=True), _EPS)
-    add_rc, rem = _integerize(share_p * t_r, rem, t_r, j_plus)
+    add1 = jnp.minimum(share_p * t_r, owed)
+    headroom = owed - add1
+    leftover = t_r - jnp.sum(add1, axis=-1, keepdims=True)
+    add_raw = add1 + leftover * headroom / jnp.maximum(
+        jnp.sum(headroom, axis=-1, keepdims=True), _EPS)
+    add_rc, rem = _integerize(add_raw, rem, t_r, j_plus)
     alpha_rc = alpha_rd - reclaim + add_rc
     r_rc = r_rd + reclaim - add_rc
 

@@ -1,0 +1,9 @@
+"""Shims over Pallas TPU API renames across JAX releases.
+
+``pltpu.TPUCompilerParams`` became ``pltpu.CompilerParams`` in newer JAX;
+kernels import the name from here so one tree runs on both."""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams

@@ -170,8 +170,12 @@ def spec_tree_to_shardings(specs, mesh):
 
 def shard(x, logical: Tuple[Optional[str], ...]):
     """Activation sharding constraint by logical axes.  Resolves against the
-    ambient (abstract) mesh; no-op when there is none (CPU unit tests)."""
-    mesh = jax.sharding.get_abstract_mesh()
+    ambient (abstract) mesh; no-op when there is none (CPU unit tests) or
+    when this JAX release predates ambient abstract meshes."""
+    get_mesh = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get_mesh is None:
+        return x
+    mesh = get_mesh()
     if not mesh.axis_names:
         return x
     return jax.lax.with_sharding_constraint(x, logical_to_mesh(logical, mesh))

@@ -1,11 +1,35 @@
-"""Storage substrate: discrete-time OST simulator, paper workload scenarios,
-and the AdapTBF I/O control plane for the framework's own traffic."""
+"""Storage substrate: discrete-time single-OST and fleet simulators, client
+striping policies, the named scenario registry, and the AdapTBF I/O control
+plane for the framework's own traffic."""
 from repro.storage.controller import RPC_BYTES, AdapTBFController
-from repro.storage.simulator import SimConfig, SimResult, simulate, utilization
+from repro.storage.simulator import (
+    FLEET_CONTROL_CODES,
+    FleetConfig,
+    FleetResult,
+    SimConfig,
+    SimResult,
+    simulate,
+    simulate_fleet,
+    utilization,
+)
+from repro.storage.striping import (
+    FleetDemand,
+    route,
+    route_progressive,
+    route_round_robin,
+    stripe_targets,
+    stripe_weights,
+)
 from repro.storage.workloads import (
+    FleetScenario,
     Scenario,
+    active_between,
     continuous,
+    get_scenario,
+    list_fleet_scenarios,
+    list_scenarios,
     periodic_bursts,
+    register_scenario,
     scenario_allocation,
     scenario_recompensation,
     scenario_redistribution,
@@ -14,13 +38,29 @@ from repro.storage.workloads import (
 __all__ = [
     "AdapTBFController",
     "RPC_BYTES",
+    "FLEET_CONTROL_CODES",
+    "FleetConfig",
+    "FleetResult",
     "SimConfig",
     "SimResult",
     "simulate",
+    "simulate_fleet",
     "utilization",
+    "FleetDemand",
+    "route",
+    "route_progressive",
+    "route_round_robin",
+    "stripe_targets",
+    "stripe_weights",
+    "FleetScenario",
     "Scenario",
+    "active_between",
     "continuous",
+    "get_scenario",
+    "list_fleet_scenarios",
+    "list_scenarios",
     "periodic_bursts",
+    "register_scenario",
     "scenario_allocation",
     "scenario_redistribution",
     "scenario_recompensation",

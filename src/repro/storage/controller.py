@@ -22,6 +22,7 @@ import numpy as np
 
 from repro.core import fleet_allocate
 from repro.core.state import init_fleet_state
+from repro.storage.striping import stripe_targets
 
 RPC_BYTES = 1 << 20  # 1 token = 1 RPC = 1 MB
 
@@ -36,15 +37,19 @@ class AdapTBFController:
         max_jobs: int = 16,
         time_fn: Callable[[], float] = time.monotonic,
         sleep_fn: Callable[[float], None] = time.sleep,
+        default_stripe_count: Optional[int] = None,
     ):
         self.n_targets = n_targets
         self.window_s = window_s
         self.capacity = capacity_rpc_per_s * window_s  # tokens per window
         self.u_max = u_max
+        self._default_stripe = default_stripe_count or n_targets
         self._time, self._sleep = time_fn, sleep_fn
         self._lock = threading.RLock()
         self._jobs: Dict[str, int] = {}
         self._nodes = np.zeros(max_jobs, np.float32)
+        self._stripes: Dict[int, np.ndarray] = {}
+        self._rpc_seq = np.zeros(max_jobs, np.int64)
         self._state = init_fleet_state(n_targets, max_jobs)
         self._demand = np.zeros((n_targets, max_jobs), np.float32)
         self._consumed = np.zeros((n_targets, max_jobs), np.float32)
@@ -55,7 +60,11 @@ class AdapTBFController:
 
     # ------------------------------------------------------------- jobs
 
-    def register_job(self, name: str, nodes: float) -> int:
+    def register_job(self, name: str, nodes: float,
+                     stripe_count: Optional[int] = None) -> int:
+        """Register a job with its compute-node priority and optionally a
+        stripe width; chunks round-robin over the job's stripe set (the same
+        placement the fleet simulator's striping policies use)."""
         with self._lock:
             if name in self._jobs:
                 return self._jobs[name]
@@ -64,7 +73,13 @@ class AdapTBFController:
                 raise ValueError("max_jobs exceeded")
             self._jobs[name] = idx
             self._nodes[idx] = nodes
+            self._stripes[idx] = stripe_targets(
+                idx, self.n_targets, stripe_count or self._default_stripe)
             return idx
+
+    def stripe_set(self, job: str) -> np.ndarray:
+        """The OST indices this job's chunks round-robin over."""
+        return self._stripes[self._jobs[job]].copy()
 
     # ----------------------------------------------------------- control
 
@@ -93,20 +108,30 @@ class AdapTBFController:
 
     def request(self, job: str, nbytes: int, target: Optional[int] = None):
         """Meter ``nbytes`` of I/O for ``job``; blocks (sleeps) until budget
-        admits it.  Striping: chunks pick targets round-robin by default."""
+        admits it.  Striping: chunks round-robin over the job's stripe set
+        (deterministic, like the simulator's round_robin policy) unless an
+        explicit ``target`` pins them."""
         idx = self._jobs[job]
         tokens = max(1, int(np.ceil(nbytes / RPC_BYTES)))
-        t = (hash((job, self.windows_run)) if target is None else target) \
-            % self.n_targets
         with self._lock:
+            if target is None:
+                stripes = self._stripes[idx]
+                t = int(stripes[self._rpc_seq[idx] % stripes.shape[0]])
+                self._rpc_seq[idx] += 1
+            else:
+                t = target % self.n_targets
             self._maybe_roll()
             self._demand[t, idx] += tokens
-            while self._consumed[t, idx] + tokens > self._budget[t, idx]:
-                wait = max(self._window_end - self._time(), 1e-4)
-                self._sleep(wait)
+        # wait loop sleeps OUTSIDE the lock: one throttled job must not stall
+        # other jobs' metering (their budgets are independent token buckets)
+        while True:
+            with self._lock:
                 self._maybe_roll()
-            self._consumed[t, idx] += tokens
-        return t
+                if self._consumed[t, idx] + tokens <= self._budget[t, idx]:
+                    self._consumed[t, idx] += tokens
+                    return t
+                wait = max(self._window_end - self._time(), 1e-4)
+            self._sleep(wait)
 
     def try_consume(self, job: str, tokens: float, target: int = 0) -> bool:
         """Non-blocking budget check-and-consume (serving admission)."""

@@ -1,0 +1,79 @@
+"""Performance/fairness metrics over simulator trajectories.
+
+Used by the fleet benchmark sweep (``benchmarks/fleet_sweep.py``) and the
+fleet test suite.  All functions take numpy-compatible arrays and return
+plain floats so reports serialize straight to JSON.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def jain_index(x) -> float:
+    """Jain's fairness index over non-negative shares: 1 = perfectly fair,
+    1/n = maximally unfair.  Zeros COUNT: a starved participant is the
+    unfairest outcome, so callers must pre-select the participating entries
+    (see ``fairness``), not rely on zero-dropping here."""
+    x = np.asarray(x, np.float64).ravel()
+    if x.size == 0 or not (x > 0).any():
+        return 1.0
+    return float(x.sum() ** 2 / (x.size * (x ** 2).sum()))
+
+
+def priority_normalized_throughput(served_wj, nodes) -> np.ndarray:
+    """[J] total served per job divided by its priority share -- the quantity
+    AdapTBF tries to equalize (a job's bandwidth proportional to its compute
+    allocation).  served_wj: [..., J] window trajectories."""
+    served = np.asarray(served_wj, np.float64)
+    total = served.reshape(-1, served.shape[-1]).sum(axis=0)
+    share = np.asarray(nodes, np.float64)
+    share = share / share.sum()
+    return total / np.maximum(share, 1e-12)
+
+
+def fairness(served_wj, nodes, demand_wj=None) -> float:
+    """Jain index over priority-normalized per-job throughput.
+
+    Participation: jobs that demanded anything (when ``demand_wj`` is given)
+    or, failing that, jobs that were served anything.  A job that demanded
+    I/O but got zero stays in as a zero -- starvation must drag the index
+    down, not vanish from it."""
+    norm = priority_normalized_throughput(served_wj, nodes)
+    if demand_wj is not None:
+        d = np.asarray(demand_wj, np.float64)
+        active = d.reshape(-1, d.shape[-1]).sum(axis=0) > 0
+    else:
+        active = norm > 0
+    return jain_index(norm[active])
+
+
+def mean_utilization(served, capacity_per_window, busy_only: bool = True) -> float:
+    """Mean fraction of disk capacity used per window.
+
+    served: [W, J] (single target) or [W, O, J] (fleet);
+    capacity_per_window: scalar or [O].  With ``busy_only``, windows where
+    nothing was served anywhere are excluded (cold start / drained tail).
+    """
+    served = np.asarray(served, np.float64)
+    util = served.sum(axis=-1) / np.maximum(
+        np.asarray(capacity_per_window, np.float64), 1e-12)
+    if util.ndim == 2:  # [W, O] -> average over the fleet per window
+        busy = util.sum(axis=-1) > 0
+        util = util.mean(axis=-1)
+    else:
+        busy = util > 0
+    if busy_only and busy.any():
+        util = util[busy]
+    return float(util.mean())
+
+
+def aggregate_mb(served) -> float:
+    """Total data moved (1 RPC = 1 MB)."""
+    return float(np.asarray(served, np.float64).sum())
+
+
+def p99_queue(demand, served) -> float:
+    """99th percentile of the per-window backlog growth (demand - served),
+    a proxy for tail latency pressure."""
+    lag = np.asarray(demand, np.float64) - np.asarray(served, np.float64)
+    return float(np.percentile(lag.ravel(), 99))

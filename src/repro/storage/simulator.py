@@ -1,4 +1,4 @@
-"""Discrete-time storage-target simulator (replaces the paper's CloudLab/Lustre
+"""Discrete-time storage simulator (replaces the paper's CloudLab/Lustre
 testbed; DESIGN.md section 2 "hardware adaptation").
 
 Model
@@ -24,9 +24,29 @@ Model
   have their rule stopped -> fallback), ``static`` (fixed rules for every job,
   never stopped), ``nobw`` (no rules at all -> everything fallback, i.e.
   backlog-proportional FCFS).
+* the demand signal d_x fed to the allocator is what the server can observe:
+  RPCs served during the window plus the standing queue at window end.
+  Counting the queue is essential for allocation-starved jobs -- their
+  clients' in-flight caps throttle issuance to ~the service rate, so an
+  issuance-only signal would report u_x ~= 1 and never trigger the Eq. 6
+  deficit boost (DESIGN.md section 3).
 
-The whole simulation is a ``lax.scan`` over windows with an inner scan over
-ticks -- jittable end to end.
+Two entry points share the tick/window machinery below:
+
+* ``simulate``       -- one storage target (the paper's testbed).
+* ``simulate_fleet`` -- ``n_ost`` targets with per-OST queues and (possibly
+  heterogeneous) capacities; clients stripe their RPC streams across targets
+  (see ``storage/striping.py``).  Every OST runs the allocator independently
+  -- the per-OST service/allocation path is the *same* function ``vmap``-ed
+  over the OST axis, so the paper's decentralization claim is structural:
+  a fleet run bitwise-matches independent single-OST runs on the same
+  per-OST demand (tested in ``tests/test_fleet_sim.py``).
+
+Both are a ``lax.scan`` over windows with an inner scan over ticks --
+jittable end to end.  ``simulate_fleet`` additionally takes a traced
+``control_code`` path (``FLEET_CONTROL_CODES``) so a benchmark sweep can
+``vmap`` one compiled program over scenarios x control modes
+(``benchmarks/fleet_sweep.py``).
 """
 from __future__ import annotations
 
@@ -37,9 +57,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import adaptbf, baselines
-from repro.core.state import init_state
+from repro.core.state import AllocatorState, init_fleet_state, init_state
 
 _EPS = 1e-9
+
+FLEET_CONTROL_CODES = {"adaptbf": 0, "static": 1, "nobw": 2}
 
 
 class SimConfig(NamedTuple):
@@ -52,9 +74,24 @@ class SimConfig(NamedTuple):
     max_backlog: float = 256.0         # default client in-flight cap per job
 
 
+class FleetConfig(NamedTuple):
+    """Static configuration for ``simulate_fleet`` (hashable -> one
+    compilation per (shape, control, backend) combination)."""
+
+    capacity_per_tick: float = 20.0    # default per-OST capacity (RPCs/tick)
+    window_ticks: int = 10
+    tick_seconds: float = 0.01
+    control: str = "adaptbf"           # adaptbf | static | nobw | coded
+    u_max: float = 64.0
+    integer_tokens: bool = True
+    max_backlog: float = 256.0
+    alloc_backend: str = "core"        # core (vmap) | pallas (kernel)
+
+
 class SimResult(NamedTuple):
     served: jnp.ndarray        # [n_windows, J] RPCs served per window per job
-    demand: jnp.ndarray        # [n_windows, J] RPCs issued per window (d_x)
+    demand: jnp.ndarray        # [n_windows, J] observed demand d_x per window
+                               #   (RPCs served + standing queue at window end)
     alloc: jnp.ndarray         # [n_windows, J] token budget applied that window
     record: jnp.ndarray        # [n_windows, J] lend/borrow record after window
     queue_final: jnp.ndarray   # [J]
@@ -66,8 +103,71 @@ class SimResult(NamedTuple):
         return self.served / self.window_seconds
 
 
-def _window_capacity(cfg: SimConfig) -> float:
+class FleetResult(NamedTuple):
+    served: jnp.ndarray        # [n_windows, O, J]
+    demand: jnp.ndarray        # [n_windows, O, J]
+    alloc: jnp.ndarray         # [n_windows, O, J]
+    record: jnp.ndarray        # [n_windows, O, J]
+    queue_final: jnp.ndarray   # [O, J]
+    window_seconds: float
+
+    @property
+    def throughput_mb_s(self):
+        """[n_windows, O, J] MB/s assuming 1 RPC = 1 MB."""
+        return self.served / self.window_seconds
+
+    def per_ost(self, i: int) -> SimResult:
+        """View of one OST's trajectory as a single-target result."""
+        return SimResult(
+            served=self.served[:, i], demand=self.demand[:, i],
+            alloc=self.alloc[:, i], record=self.record[:, i],
+            queue_final=self.queue_final[i],
+            window_seconds=self.window_seconds,
+        )
+
+
+def _window_capacity(cfg) -> float:
     return cfg.capacity_per_tick * cfg.window_ticks
+
+
+# --------------------------------------------------------- shared machinery
+
+
+def _serve_tick(queue, vol_left, budget, rate_t, backlog_cap, capacity):
+    """One tick on ONE storage target: client issuance into the server-side
+    queue, then two-phase NRS-TBF service.  All arrays [J]; ``capacity`` is
+    the per-tick scalar.  The fleet path is this exact function vmapped over
+    the OST axis (decentralization is structural)."""
+    headroom = jnp.maximum(backlog_cap - queue, 0.0)
+    issued = jnp.minimum(jnp.minimum(rate_t, vol_left), headroom)
+    queue = queue + issued
+    vol_left = vol_left - issued
+    queue = jnp.maximum(queue, 0.0)  # fp guard
+    ruled = jnp.isfinite(budget)
+    # phase 1: token-gated service for ruled jobs
+    want1 = jnp.where(ruled, jnp.minimum(queue, jnp.maximum(budget, 0.0)), 0.0)
+    s1 = want1 * jnp.minimum(1.0, capacity / jnp.maximum(want1.sum(), _EPS))
+    # phase 2: fallback queue served from idle capacity only
+    spare = jnp.maximum(capacity - s1.sum(), 0.0)
+    want2 = jnp.where(ruled, 0.0, queue)
+    s2 = want2 * jnp.minimum(1.0, spare / jnp.maximum(want2.sum(), _EPS))
+    # proportional scaling can overshoot the queue by an ulp; clamping keeps
+    # cumulative served <= cumulative issued over long horizons
+    served = jnp.minimum(s1 + s2, queue)
+    queue = queue - served
+    budget = budget - served  # inf stays inf for unruled jobs
+    return queue, vol_left, budget, served, issued
+
+
+def _gate_budget(control: str, alloc):
+    """Window-start token budget from the last allocation.  Under adaptbf a
+    zero allocation means the job's rule is *stopped* -> fallback queue."""
+    if control == "adaptbf":
+        return jnp.where(alloc > 0, alloc, jnp.inf)
+    return alloc
+
+
+# ------------------------------------------------------------ single target
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
@@ -105,34 +205,18 @@ def simulate(
 
     def tick_fn(carry, rate_t):
         queue, vol_left, budget = carry
-        headroom = jnp.maximum(backlog_cap - queue, 0.0)
-        issued = jnp.minimum(jnp.minimum(rate_t, vol_left), headroom)
-        queue = queue + issued
-        vol_left = vol_left - issued
-        queue = jnp.maximum(queue, 0.0)  # fp guard
-        ruled = jnp.isfinite(budget)
-        # phase 1: token-gated service for ruled jobs
-        want1 = jnp.where(ruled, jnp.minimum(queue, jnp.maximum(budget, 0.0)), 0.0)
-        s1 = want1 * jnp.minimum(
-            1.0, cfg.capacity_per_tick / jnp.maximum(want1.sum(), _EPS)
-        )
-        # phase 2: fallback queue served from idle capacity only
-        spare = jnp.maximum(cfg.capacity_per_tick - s1.sum(), 0.0)
-        want2 = jnp.where(ruled, 0.0, queue)
-        s2 = want2 * jnp.minimum(1.0, spare / jnp.maximum(want2.sum(), _EPS))
-        served = s1 + s2
-        queue = queue - served
-        budget = budget - served  # inf stays inf for unruled jobs
+        queue, vol_left, budget, served, issued = _serve_tick(
+            queue, vol_left, budget, rate_t, backlog_cap,
+            cfg.capacity_per_tick)
         return (queue, vol_left, budget), (served, issued)
 
     def window_fn(carry, rates_w):
         queue, vol_left, astate, alloc = carry
-        budget0 = jnp.where(alloc > 0, alloc, jnp.inf) if cfg.control == "adaptbf" \
-            else alloc
+        budget0 = _gate_budget(cfg.control, alloc)
         (queue, vol_left, _), (served_t, issued_t) = jax.lax.scan(
             tick_fn, (queue, vol_left, budget0), rates_w
         )
-        demand = issued_t.sum(axis=0)
+        demand = served_t.sum(axis=0) + queue
         if cfg.control == "adaptbf":
             astate, alloc_next = adaptbf.allocate(
                 astate, demand, nodes, cap_w,
@@ -168,6 +252,170 @@ def simulate(
     )
 
 
-def utilization(result: SimResult, cfg: SimConfig) -> jnp.ndarray:
-    """Per-window fraction of disk capacity actually used."""
+# -------------------------------------------------------------------- fleet
+
+
+def _fleet_allocate(cfg: FleetConfig, astate, demand, nodes, cap_w):
+    """One decentralized allocation round for every OST, via the selected
+    backend.  demand/nodes: [O, J]; cap_w: [O]."""
+    if cfg.alloc_backend == "core":
+        return adaptbf.fleet_allocate(
+            astate, demand, nodes, cap_w,
+            u_max=cfg.u_max, integer_tokens=cfg.integer_tokens)
+    if cfg.alloc_backend == "pallas":
+        if not cfg.integer_tokens:
+            raise ValueError(
+                'alloc_backend="pallas" supports integer tokens only; use '
+                'the "core" backend for float-token (continuous) budgets')
+        # imported lazily: the kernel path pulls in pallas machinery that the
+        # plain vmap backend never needs
+        from repro.kernels.adaptbf_alloc import ops
+        alloc, rec, rem = ops.fleet_alloc(
+            demand, nodes, astate.record, astate.remainder,
+            astate.alloc_prev, cap_w, u_max=cfg.u_max)
+        return AllocatorState(record=rec, remainder=rem, alloc_prev=alloc), alloc
+    raise ValueError(f"unknown alloc_backend: {cfg.alloc_backend!r}")
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def simulate_fleet(
+    cfg: FleetConfig,
+    nodes: jnp.ndarray,
+    issue_rate: jnp.ndarray,
+    volume: jnp.ndarray,
+    capacity_per_tick: Optional[jnp.ndarray] = None,
+    max_backlog: Optional[jnp.ndarray] = None,
+    control_code: Optional[jnp.ndarray] = None,
+) -> FleetResult:
+    """Simulate ``n_ost`` storage targets with striped client demand.
+
+    Args:
+      cfg: FleetConfig (static).  ``cfg.control`` picks the mode unless it is
+        ``"coded"`` (see ``control_code``).
+      nodes: [J] or [O, J] compute nodes per job.
+      issue_rate: [T, O, J] per-target client issue attempts (RPCs/tick) --
+        the output of a striping policy (``storage.striping``) or raw
+        per-OST traces.
+      volume: [O, J] total RPCs per job per target (inf = unbounded).
+      capacity_per_tick: optional [O] heterogeneous per-OST service rates
+        (defaults to cfg.capacity_per_tick everywhere).
+      max_backlog: optional [O, J] per-target client in-flight caps.
+      control_code: traced scalar int32 selecting the control mode at runtime
+        (``FLEET_CONTROL_CODES``); requires ``cfg.control == "coded"``.  This
+        is what lets one compiled program sweep scenarios x modes under vmap.
+
+    Returns:
+      FleetResult with [n_windows, O, J] trajectories.
+    """
+    t_total, n_ost, n_jobs = issue_rate.shape
+    n_windows = t_total // cfg.window_ticks
+    rates = issue_rate[: n_windows * cfg.window_ticks].reshape(
+        n_windows, cfg.window_ticks, n_ost, n_jobs
+    )
+    coded = cfg.control == "coded"
+    if coded and control_code is None:
+        raise ValueError('cfg.control == "coded" requires control_code')
+    if not coded and control_code is not None:
+        raise ValueError('control_code requires cfg.control == "coded"')
+
+    nodes = jnp.asarray(nodes, jnp.float32)
+    if nodes.ndim == 1:
+        nodes = jnp.broadcast_to(nodes, (n_ost, n_jobs))
+    if capacity_per_tick is None:
+        cap_tick = jnp.full((n_ost,), cfg.capacity_per_tick, jnp.float32)
+    else:
+        cap_tick = jnp.asarray(capacity_per_tick, jnp.float32)
+    cap_w = cap_tick * cfg.window_ticks
+    if max_backlog is None:
+        backlog_cap = jnp.full((n_ost, n_jobs), cfg.max_backlog, jnp.float32)
+    else:
+        backlog_cap = jnp.asarray(max_backlog, jnp.float32)
+
+    static_alloc = jax.vmap(baselines.static_allocate)(nodes, cap_w)
+    unruled = jnp.full((n_ost, n_jobs), jnp.inf, jnp.float32)
+    serve_tick = jax.vmap(_serve_tick)
+    cap_tick_col = cap_tick  # [O], one scalar per vmapped row
+
+    def tick_fn(carry, rate_t):
+        queue, vol_left, budget = carry
+        queue, vol_left, budget, served, issued = serve_tick(
+            queue, vol_left, budget, rate_t, backlog_cap, cap_tick_col)
+        return (queue, vol_left, budget), (served, issued)
+
+    def next_alloc(astate, demand):
+        """Control-mode dispatch.  Static modes resolve at trace time; the
+        coded path computes the adaptbf round and selects elementwise so the
+        mode can be a vmapped runtime value."""
+        if cfg.control == "adaptbf":
+            return _fleet_allocate(cfg, astate, demand, nodes, cap_w)
+        if cfg.control == "static":
+            return astate, static_alloc
+        if cfg.control == "nobw":
+            return astate, unruled
+        # coded: 0 = adaptbf, 1 = static, 2 = nobw
+        astate_ad, alloc_ad = _fleet_allocate(cfg, astate, demand, nodes, cap_w)
+        is_ad = control_code == FLEET_CONTROL_CODES["adaptbf"]
+        astate_next = jax.tree.map(
+            lambda a, b: jnp.where(is_ad, a, b), astate_ad, astate)
+        alloc_next = jnp.where(
+            is_ad, alloc_ad,
+            jnp.where(control_code == FLEET_CONTROL_CODES["static"],
+                      static_alloc, unruled))
+        return astate_next, alloc_next
+
+    def gate(alloc):
+        if coded:
+            is_ad = control_code == FLEET_CONTROL_CODES["adaptbf"]
+            return jnp.where(is_ad, jnp.where(alloc > 0, alloc, jnp.inf), alloc)
+        return _gate_budget(cfg.control, alloc)
+
+    def window_fn(carry, rates_w):
+        queue, vol_left, astate, alloc = carry
+        budget0 = gate(alloc)
+        (queue, vol_left, _), (served_t, issued_t) = jax.lax.scan(
+            tick_fn, (queue, vol_left, budget0), rates_w
+        )
+        demand = served_t.sum(axis=0) + queue
+        astate, alloc_next = next_alloc(astate, demand)
+        out = (served_t.sum(axis=0), demand, alloc, astate.record)
+        return (queue, vol_left, astate, alloc_next), out
+
+    astate0 = init_fleet_state(n_ost, n_jobs)
+    if cfg.control == "static":
+        alloc0 = static_alloc
+    elif coded:
+        alloc0 = jnp.where(control_code == FLEET_CONTROL_CODES["static"],
+                           static_alloc, unruled)
+    else:
+        alloc0 = unruled
+    carry0 = (
+        jnp.zeros((n_ost, n_jobs), jnp.float32),
+        jnp.asarray(volume, jnp.float32),
+        astate0,
+        alloc0,
+    )
+    (queue, _, _, _), (served, demand, alloc, record) = jax.lax.scan(
+        window_fn, carry0, rates
+    )
+    return FleetResult(
+        served=served,
+        demand=demand,
+        alloc=alloc,
+        record=record,
+        queue_final=queue,
+        window_seconds=cfg.window_ticks * cfg.tick_seconds,
+    )
+
+
+def utilization(result, cfg, capacity_per_tick=None):
+    """Per-window fraction of disk capacity actually used.
+
+    Single target: [n_windows].  Fleet: [n_windows, O] (pass the per-OST
+    ``capacity_per_tick`` array used in the run for heterogeneous fleets).
+    """
+    if isinstance(result, FleetResult):
+        if capacity_per_tick is None:
+            capacity_per_tick = cfg.capacity_per_tick
+        cap_w = jnp.asarray(capacity_per_tick) * cfg.window_ticks
+        return result.served.sum(axis=-1) / cap_w
     return result.served.sum(axis=-1) / _window_capacity(cfg)

@@ -1,17 +1,30 @@
-"""Synthetic workload generators modeled after the paper's Filebench scenarios
-(Sections IV-D, IV-E, IV-F).  All builders return a ``Scenario`` suitable for
-``storage.simulator.simulate``.
+"""Synthetic workload scenarios: the paper's Filebench experiments (Sections
+IV-D, IV-E, IV-F) plus fleet-scale scenarios, behind a named registry.
 
 Scaling: 1 RPC = 1 MB.  A 16-process x 1 GB file-per-process job is 16384 RPCs
 of total volume; client aggregate issue capability is the NIC-side bound
 (>= OST capacity, so continuous jobs can saturate the target).  The per-job
 client backlog cap models Lustre ``max_rpcs_in_flight`` (~16) x processes.
+
+Registry
+--------
+Every builder is registered under its scenario name::
+
+    from repro.storage import get_scenario, list_scenarios
+    scn = get_scenario("fleet_noisy_neighbor", duration_s=20.0)
+
+Single-target builders return a ``Scenario`` for ``simulator.simulate``;
+fleet builders return a ``FleetScenario`` whose job streams have already been
+routed across OSTs by a striping policy (``storage.striping``) for
+``simulator.simulate_fleet``.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import Callable, Dict, NamedTuple
 
 import numpy as np
+
+from repro.storage import striping
 
 GB_RPCS = 1024          # RPCs per 1 GB file at 1 MB per RPC
 IN_FLIGHT_PER_PROC = 16  # Lustre client max_rpcs_in_flight
@@ -27,9 +40,65 @@ class Scenario(NamedTuple):
     tick_seconds: float = 0.01
 
 
+class FleetScenario(NamedTuple):
+    name: str
+    nodes: np.ndarray              # [J] compute nodes (priorities)
+    issue_rate: np.ndarray         # [T, O, J] RPCs/tick routed per target
+    volume: np.ndarray             # [O, J] total RPCs per target
+    max_backlog: np.ndarray        # [O, J] client in-flight cap per target
+    capacity_per_tick: np.ndarray  # [O] per-OST service rate (RPCs/tick)
+    duration_s: float
+    tick_seconds: float = 0.01
+
+    @property
+    def n_ost(self) -> int:
+        return self.issue_rate.shape[1]
+
+
+SCENARIOS: Dict[str, Callable] = {}
+
+
+def register_scenario(name: str):
+    """Decorator: register a scenario builder under ``name``."""
+    def deco(fn):
+        fn.scenario_name = name
+        SCENARIOS[name] = fn
+        return fn
+    return deco
+
+
+def get_scenario(name: str, **kwargs):
+    """Build a registered scenario by name."""
+    try:
+        builder = SCENARIOS[name]
+    except KeyError:
+        raise ValueError(f"unknown scenario {name!r}; have {list_scenarios()}")
+    return builder(**kwargs)
+
+
+def list_scenarios():
+    return sorted(SCENARIOS)
+
+
+def list_fleet_scenarios():
+    """Names of scenarios whose builders produce a FleetScenario."""
+    return sorted(n for n in SCENARIOS if n.startswith("fleet_"))
+
+
+# ----------------------------------------------------------- trace builders
+
+
 def continuous(t_ticks: int, rate: float, start_tick: int = 0) -> np.ndarray:
     out = np.zeros(t_ticks, np.float32)
     out[start_tick:] = rate
+    return out
+
+
+def active_between(t_ticks: int, rate: float, start_tick: int,
+                   end_tick: int) -> np.ndarray:
+    """A job that arrives at ``start_tick`` and departs at ``end_tick``."""
+    out = np.zeros(t_ticks, np.float32)
+    out[start_tick:end_tick] = rate
     return out
 
 
@@ -49,6 +118,10 @@ def periodic_bursts(
     return out
 
 
+# ------------------------------------------------- paper (single-target)
+
+
+@register_scenario("allocation_ivd")
 def scenario_allocation(duration_s: float = 60.0, tick_s: float = 0.01) -> Scenario:
     """Section IV-D: four identical continuous jobs (16 procs x 1 GB each) with
     priorities 10/10/30/50%; higher priority jobs finish earlier, so the active
@@ -62,6 +135,7 @@ def scenario_allocation(duration_s: float = 60.0, tick_s: float = 0.01) -> Scena
     return Scenario("allocation_ivd", nodes, issue, volume, backlog, duration_s, tick_s)
 
 
+@register_scenario("redistribution_ive")
 def scenario_redistribution(duration_s: float = 60.0, tick_s: float = 0.01) -> Scenario:
     """Section IV-E: three high-priority (30% each) bursty jobs (2 procs x 1 GB)
     with different burst magnitudes/intervals + one low-priority (10%)
@@ -86,6 +160,7 @@ def scenario_redistribution(duration_s: float = 60.0, tick_s: float = 0.01) -> S
     )
 
 
+@register_scenario("recompensation_ivf")
 def scenario_recompensation(duration_s: float = 120.0, tick_s: float = 0.01) -> Scenario:
     """Section IV-F: equal priorities (25% each).  Jobs 1-3: one process does
     small constant-interval bursts; a second process starts continuous I/O
@@ -116,3 +191,127 @@ def scenario_recompensation(duration_s: float = 120.0, tick_s: float = 0.01) -> 
     return Scenario(
         "recompensation_ivf", nodes, issue, volume, backlog, duration_s, tick_s
     )
+
+
+# -------------------------------------------------------- fleet scenarios
+
+
+def _route(name, nodes, issue, volume, backlog, capacity, duration_s, tick_s,
+           policy="round_robin", **route_kw) -> FleetScenario:
+    n_ost = capacity.shape[0]
+    demand = striping.route(policy, issue, volume, backlog, n_ost, **route_kw)
+    return FleetScenario(
+        name, nodes, demand.issue_rate, demand.volume, demand.max_backlog,
+        capacity.astype(np.float32), duration_s, tick_s)
+
+
+@register_scenario("fleet_noisy_neighbor")
+def scenario_fleet_noisy_neighbor(
+    duration_s: float = 30.0, tick_s: float = 0.01, n_ost: int = 8
+) -> FleetScenario:
+    """Noisy neighbor on a few stripes: a single-node job hammers two OSTs
+    with small random writes while four wide-striped, well-provisioned jobs
+    sweep the whole fleet -- two of them bursty, so static TBF strands their
+    idle share.  Only the noisy job's stripe set should feel it; AdapTBF must
+    confine it to its 1-node share there *while* its OSTs lend the bursty
+    jobs' idle tokens (work conservation)."""
+    t = int(duration_s / tick_s)
+    #          2 bursty + 2 continuous wide jobs      noisy neighbor
+    nodes = np.array([48, 48, 32, 32, 1], np.float32)
+    issue = np.stack(
+        [
+            periodic_bursts(t, burst_rpcs=2400, interval_ticks=300,
+                            burst_ticks=60, start_tick=0),
+            periodic_bursts(t, burst_rpcs=2400, interval_ticks=300,
+                            burst_ticks=60, start_tick=150),
+            continuous(t, rate=25.0),
+            continuous(t, rate=25.0),
+            continuous(t, rate=60.0),   # small random writes, NIC-bound hog
+        ],
+        axis=1,
+    )
+    volume = np.full(5, np.inf, np.float32)
+    backlog = np.array([16 * IN_FLIGHT_PER_PROC] * 4 + [128], np.float32)
+    stripe_count = np.array([n_ost] * 4 + [2], np.int64)
+    return _route(
+        "fleet_noisy_neighbor", nodes, issue, volume, backlog,
+        np.full(n_ost, 20.0), duration_s, tick_s, stripe_count=stripe_count)
+
+
+@register_scenario("fleet_ost_imbalance")
+def scenario_fleet_ost_imbalance(
+    duration_s: float = 30.0, tick_s: float = 0.01, n_ost: int = 8
+) -> FleetScenario:
+    """Heterogeneous targets: half the fleet serves at full rate, half is
+    degraded to 40% (failed disk in the RAID, rebalancing, ...).  Six equal
+    wide-striped jobs; the decentralized allocator on each slow OST must
+    shrink its own budgets with no global coordination."""
+    t = int(duration_s / tick_s)
+    n_jobs = 6
+    nodes = np.full(n_jobs, 16, np.float32)
+    issue = np.stack([continuous(t, rate=35.0) for _ in range(n_jobs)], axis=1)
+    volume = np.full(n_jobs, np.inf, np.float32)
+    backlog = np.full(n_jobs, 16 * IN_FLIGHT_PER_PROC, np.float32)
+    capacity = np.where(np.arange(n_ost) < n_ost // 2, 20.0, 8.0)
+    return _route(
+        "fleet_ost_imbalance", nodes, issue, volume, backlog,
+        capacity, duration_s, tick_s)
+
+
+@register_scenario("fleet_burst_storm")
+def scenario_fleet_burst_storm(
+    duration_s: float = 30.0, tick_s: float = 0.01, n_ost: int = 8
+) -> FleetScenario:
+    """Burst storm with staggered phases: five bursty jobs whose burst phases
+    are offset so the storm rolls across time, over a continuous low-priority
+    background writer.  Stresses redistribution (Section IV-E) at fleet
+    scale: every OST sees a different interleaving of the phases."""
+    t = int(duration_s / tick_s)
+    nodes = np.array([24, 24, 24, 24, 24, 8], np.float32)
+    issue = np.stack(
+        [
+            periodic_bursts(t, burst_rpcs=600, interval_ticks=400, start_tick=0),
+            periodic_bursts(t, burst_rpcs=600, interval_ticks=400, start_tick=80),
+            periodic_bursts(t, burst_rpcs=600, interval_ticks=400, start_tick=160),
+            periodic_bursts(t, burst_rpcs=600, interval_ticks=400, start_tick=240),
+            periodic_bursts(t, burst_rpcs=600, interval_ticks=400, start_tick=320),
+            continuous(t, rate=50.0),
+        ],
+        axis=1,
+    )
+    volume = np.full(6, np.inf, np.float32)
+    backlog = np.array([256] * 5 + [16 * IN_FLIGHT_PER_PROC], np.float32)
+    # progressive layout: each burst starts as a small file on one OST and
+    # widens as it grows
+    return _route(
+        "fleet_burst_storm", nodes, issue, volume, backlog,
+        np.full(n_ost, 20.0), duration_s, tick_s, policy="progressive")
+
+
+@register_scenario("fleet_churn")
+def scenario_fleet_churn(
+    duration_s: float = 30.0, tick_s: float = 0.01, n_ost: int = 8
+) -> FleetScenario:
+    """Arrival/departure churn: jobs enter and leave throughout the run, so
+    every OST's active set keeps changing and window-0 cold starts (no rules
+    yet) happen repeatedly at fleet scale."""
+    t = int(duration_s / tick_s)
+    seg = t // 6
+    nodes = np.array([20, 20, 30, 30, 10, 10], np.float32)
+    issue = np.stack(
+        [
+            active_between(t, 40.0, 0, 4 * seg),           # departs mid-run
+            active_between(t, 40.0, seg, t),               # arrives at 1/6
+            active_between(t, 50.0, 2 * seg, 5 * seg),     # mid-run visitor
+            continuous(t, rate=30.0),                      # stays throughout
+            active_between(t, 60.0, 3 * seg, t),           # late heavy burst
+            active_between(t, 25.0, 0, 2 * seg),           # early leaver
+        ],
+        axis=1,
+    )
+    volume = np.full(6, np.inf, np.float32)
+    backlog = np.full(6, 128.0, np.float32)
+    stripe_count = np.array([n_ost, n_ost, 4, n_ost, 4, 2], np.int64)
+    return _route(
+        "fleet_churn", nodes, issue, volume, backlog,
+        np.full(n_ost, 20.0), duration_s, tick_s, stripe_count=stripe_count)

@@ -1,0 +1,58 @@
+"""Test-session foundation: CPU-pinned JAX, deterministic RNG, and Pallas
+interpret-mode fallbacks so the suite is green on machines without
+accelerators.
+
+* JAX is pinned to CPU (before any jax import) so results are host-independent
+  and no test accidentally grabs an accelerator.
+* Kernel modules (``tests/test_kernel_*``) are auto-marked ``kernel``; off
+  TPU they force the dispatching wrappers onto their interpret/reference
+  paths via ``REPRO_FORCE_REF_KERNELS``.  Tests that need the compiled TPU
+  artifact itself (marked ``requires_tpu``) are skipped with a reason.
+* Every test starts from a fixed numpy/python RNG seed; JAX keys are explicit
+  in the tests themselves.
+"""
+import os
+
+# must happen before jax initializes a backend
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import random
+
+import jax
+import numpy as np
+import pytest
+
+# must happen before test modules import the kernel dispatchers (they read
+# the flag at import time): off TPU, route them to interpret/reference paths
+if jax.default_backend() != "tpu":
+    os.environ.setdefault("REPRO_FORCE_REF_KERNELS", "1")
+
+
+def pytest_collection_modifyitems(config, items):
+    for item in items:
+        if "test_kernel_" in item.nodeid:
+            item.add_marker(pytest.mark.kernel)
+
+
+@pytest.fixture(autouse=True)
+def _deterministic_rng():
+    np.random.seed(0)
+    random.seed(0)
+    yield
+
+
+@pytest.fixture
+def pallas_interpret():
+    """True when Pallas kernels must run in interpret mode (no TPU)."""
+    import jax
+
+    return jax.default_backend() != "tpu"
+
+
+def pytest_runtest_setup(item):
+    if item.get_closest_marker("requires_tpu") is not None:
+        import jax
+
+        if jax.default_backend() != "tpu":
+            pytest.skip("needs a compiled TPU kernel; interpret mode cannot "
+                        "cover TPU-only compiler behavior")

@@ -3,7 +3,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:  # property tests below are skipped
+    HAVE_HYPOTHESIS = False
 
 from repro.core import (
     AllocatorState,
@@ -186,20 +191,33 @@ def test_integerize_respects_mask():
 
 
 # ----------------------------------------------------------- property tests
+# Skipped entirely when hypothesis is not installed (dev extra); the unit
+# tests above keep covering the same invariants on fixed cases.
 
-j_count = st.integers(2, 12)
+if HAVE_HYPOTHESIS:
+    j_count = st.integers(2, 12)
+
+    @st.composite
+    def window_case(draw):
+        j = draw(j_count)
+        demand = draw(st.lists(st.integers(0, 5000), min_size=j, max_size=j))
+        nodes = draw(st.lists(st.integers(1, 128), min_size=j, max_size=j))
+        record = draw(st.lists(st.integers(-300, 300), min_size=j, max_size=j))
+        cap = draw(st.integers(1, 20000))
+        return demand, nodes, record, cap
+else:  # pragma: no cover - placeholders so the decorators below still apply
+
+    def window_case():
+        return None
+
+    def given(*a, **k):
+        return lambda fn: pytest.mark.skip(reason="hypothesis not installed")(fn)
+
+    def settings(*a, **k):
+        return lambda fn: fn
 
 
-@st.composite
-def window_case(draw):
-    j = draw(j_count)
-    demand = draw(st.lists(st.integers(0, 5000), min_size=j, max_size=j))
-    nodes = draw(st.lists(st.integers(1, 128), min_size=j, max_size=j))
-    record = draw(st.lists(st.integers(-300, 300), min_size=j, max_size=j))
-    cap = draw(st.integers(1, 20000))
-    return demand, nodes, record, cap
-
-
+@pytest.mark.property
 @settings(max_examples=60, deadline=None)
 @given(window_case())
 def test_property_conservation_and_nonnegativity(case):
@@ -228,6 +246,7 @@ def test_property_conservation_and_nonnegativity(case):
     np.testing.assert_allclose(a, np.round(a), atol=1e-4)
 
 
+@pytest.mark.property
 @settings(max_examples=30, deadline=None)
 @given(window_case())
 def test_property_records_zero_sum_over_time(case):
@@ -242,6 +261,7 @@ def test_property_records_zero_sum_over_time(case):
     assert float(jnp.sum(state.record)) == pytest.approx(0.0, abs=1e-2)
 
 
+@pytest.mark.property
 @settings(max_examples=30, deadline=None)
 @given(window_case())
 def test_property_saturated_matches_priority(case):
