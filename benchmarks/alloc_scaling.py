@@ -1,0 +1,188 @@
+"""Allocation + service hot-path scaling benchmark: fleet shape (O, J) x
+backend sweep for ``simulate_fleet``.
+
+For every grid cell it runs a saturated adaptbf fleet (every job demanding
+more than its share, so all three allocator steps and both service phases
+stay hot) under each (alloc_backend, serve_backend) combination, measures
+steady-state wall clock (compile excluded via a warmup run), and writes
+``BENCH_alloc_scaling.json`` with windows/sec, wall-clock per simulated
+second, and the VMEM block shapes the kernel dispatchers picked -- the
+"peak shape" record that J=4096 now runs with block_o >= 4, which the old
+O(J^2) rank matrix could not fit at any block size.
+
+The ``--reference-windows-per-s`` flag embeds an externally measured
+baseline (e.g. the pre-PR simulator on the same machine) so the report can
+state the speedup at the canonical (O=64, J=1024) cell; committed artifacts
+should note the provenance in ``--reference-note``.
+
+Run:  PYTHONPATH=src python benchmarks/alloc_scaling.py \
+          [--out BENCH_alloc_scaling.json] [--smoke] \
+          [--reference-windows-per-s 12.59] [--reference-note "..."]
+
+``--smoke`` shrinks the grid to one tiny cell per backend combination --
+seconds on CPU (Pallas interpret mode), used by the CI bench-smoke job so
+this harness cannot rot.
+
+Backend provenance off-TPU: ``alloc_backend="pallas"`` cells time the
+Pallas *interpret* trace (the blocked kernel math lowered through XLA --
+a real, often faster formulation on CPU, but not the Mosaic artifact),
+while ``serve_backend="fused"`` cells time the fused XLA fallback the
+simulator actually dispatches to off-TPU.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import dispatch
+from repro.kernels.adaptbf_alloc import ops as alloc_ops
+from repro.kernels.fleet_window import ops as window_ops
+from repro.storage import FleetConfig, simulate_fleet
+
+GRID_O = (16, 64, 256)
+GRID_J = (128, 1024, 4096)
+BACKENDS = (  # (alloc_backend, serve_backend)
+    ("core", "scan"),    # the pre-PR configuration (vmapped core + tick scan)
+    ("core", "fused"),
+    ("pallas", "scan"),
+    ("pallas", "fused"),
+)
+REFERENCE_SHAPE = (64, 1024)  # the acceptance cell for speedup reporting
+
+
+def _case(o: int, j: int, n_windows: int, window_ticks: int, seed: int = 0):
+    """Saturated fleet inputs: integer rate traces with aggregate demand a
+    few times the service capacity."""
+    rng = np.random.default_rng(seed)
+    t = n_windows * window_ticks
+    nodes = jnp.asarray(rng.integers(1, 64, (j,)), jnp.float32)
+    rates = jnp.asarray(rng.integers(0, 4, (t, o, j)), jnp.float32)
+    volume = jnp.full((o, j), jnp.inf, jnp.float32)
+    return nodes, rates, volume
+
+
+def run_cell(o: int, j: int, alloc_backend: str, serve_backend: str,
+             n_windows: int, window_ticks: int = 10, reps: int = 2):
+    cfg = FleetConfig(control="adaptbf", window_ticks=window_ticks,
+                      alloc_backend=alloc_backend,
+                      serve_backend=serve_backend)
+    nodes, rates, volume = _case(o, j, n_windows, window_ticks)
+    run = lambda: jax.block_until_ready(
+        simulate_fleet(cfg, nodes, rates, volume))
+
+    t0 = time.perf_counter()
+    run()  # compile + first run
+    compile_s = time.perf_counter() - t0
+    wall = min(_timed(run) for _ in range(reps))
+
+    jp = dispatch.pad_lanes(j)
+    sim_seconds = n_windows * window_ticks * cfg.tick_seconds
+    return {
+        "o": o,
+        "j": j,
+        "alloc_backend": alloc_backend,
+        "serve_backend": serve_backend,
+        "n_windows": n_windows,
+        "wall_s": wall,
+        "windows_per_s": n_windows / wall,
+        "wall_per_sim_s": wall / sim_seconds,
+        "compile_s": compile_s,
+        "alloc_block_o": alloc_ops._block_o(jp),
+        "serve_block_o": window_ops._block_o(jp, window_ticks),
+    }
+
+
+def _timed(run):
+    t0 = time.perf_counter()
+    run()
+    return time.perf_counter() - t0
+
+
+def sweep(grid_o=GRID_O, grid_j=GRID_J, backends=BACKENDS,
+          n_windows: int = 10, window_ticks: int = 10,
+          reference_windows_per_s: float = None, reference_note: str = ""):
+    cells = []
+    for o in grid_o:
+        for j in grid_j:
+            # bound the biggest cells: fewer simulated windows, same math
+            nw = n_windows if o * j < 256 * 4096 else max(2, n_windows // 2)
+            for alloc_backend, serve_backend in backends:
+                cell = run_cell(o, j, alloc_backend, serve_backend, nw,
+                                window_ticks)
+                cells.append(cell)
+                print(f"  O={o:4d} J={j:5d} {alloc_backend}+{serve_backend}"
+                      f": {cell['windows_per_s']:8.2f} windows/s "
+                      f"(block_o alloc={cell['alloc_block_o']} "
+                      f"serve={cell['serve_block_o']})", flush=True)
+
+    peak = {}
+    for c in cells:
+        key = f"{c['alloc_backend']}+{c['serve_backend']}"
+        if key not in peak or c["o"] * c["j"] > peak[key]["o"] * peak[key]["j"]:
+            peak[key] = {k: c[k] for k in
+                         ("o", "j", "alloc_block_o", "serve_block_o")}
+
+    report = {
+        "config": {
+            "grid_o": list(grid_o),
+            "grid_j": list(grid_j),
+            "backends": [list(b) for b in backends],
+            "window_ticks": window_ticks,
+            "jax_version": jax.__version__,
+            "jax_backend": jax.default_backend(),
+        },
+        "cells": cells,
+        "peak_shape": peak,
+    }
+
+    ref_cells = [c for c in cells
+                 if (c["o"], c["j"]) == REFERENCE_SHAPE]
+    if ref_cells:
+        best = max(ref_cells, key=lambda c: c["windows_per_s"])
+        report["reference_cell"] = {
+            "o": REFERENCE_SHAPE[0], "j": REFERENCE_SHAPE[1],
+            "best_backend":
+                f"{best['alloc_backend']}+{best['serve_backend']}",
+            "best_windows_per_s": best["windows_per_s"],
+        }
+        if reference_windows_per_s:
+            report["reference_cell"]["baseline_windows_per_s"] = (
+                reference_windows_per_s)
+            report["reference_cell"]["baseline_note"] = reference_note
+            report["reference_cell"]["speedup_vs_baseline"] = (
+                best["windows_per_s"] / reference_windows_per_s)
+    return report
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=None, help="also write the JSON here")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI grid: one (8, 128) cell per backend combo")
+    ap.add_argument("--n-windows", type=int, default=10)
+    ap.add_argument("--reference-windows-per-s", type=float, default=None,
+                    help="externally measured baseline windows/sec at "
+                         "(O=64, J=1024) to report speedup against")
+    ap.add_argument("--reference-note", default="",
+                    help="provenance of the baseline measurement")
+    args = ap.parse_args()
+    if args.smoke:
+        report = sweep(grid_o=(8,), grid_j=(128,), n_windows=2)
+    else:
+        report = sweep(n_windows=args.n_windows,
+                       reference_windows_per_s=args.reference_windows_per_s,
+                       reference_note=args.reference_note)
+    text = json.dumps(report, indent=2, default=float)
+    print(text)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -12,10 +12,13 @@ and adaptbf-vs-baseline comparisons.
 
 Run:  PYTHONPATH=src python benchmarks/fleet_sweep.py [--out report.json]
                                                       [--duration-s 20]
+                                                      [--backend core|pallas]
+                                                      [--serve scan|fused]
 """
 from __future__ import annotations
 
 import argparse
+import functools
 import json
 import time
 
@@ -65,9 +68,15 @@ def stack_scenarios(scenarios):
             jnp.asarray(caps), jnp.asarray(backlog))
 
 
+@functools.lru_cache(maxsize=None)
 def build_sweep(cfg: FleetConfig):
     """One compiled program over [scenario, mode]: returns served/demand
-    trajectories of shape [S, C, W, O, J]."""
+    trajectories of shape [S, C, W, O, J].
+
+    Cached on the (hashable) config: repeated invocations -- several sweeps
+    in one process, or sweep() called from other harnesses -- reuse the
+    jitted callable instead of re-wrapping ``simulate_fleet`` in fresh
+    ``jit(vmap(vmap(...)))`` objects whose compilation cache would miss."""
     def run_one(nodes, rates, vol, caps, backlog, code):
         res = simulate_fleet(cfg, nodes, rates, vol, caps, backlog,
                              control_code=code)
@@ -77,10 +86,12 @@ def build_sweep(cfg: FleetConfig):
     return jax.jit(over_scenarios)
 
 
-def sweep(duration_s: float = 20.0, window_ticks: int = 10):
+def sweep(duration_s: float = 20.0, window_ticks: int = 10,
+          backend: str = "core", serve_backend: str = "scan"):
     names = list_fleet_scenarios()
     scenarios = [get_scenario(n, duration_s=duration_s) for n in names]
-    cfg = FleetConfig(control="coded", window_ticks=window_ticks)
+    cfg = FleetConfig(control="coded", window_ticks=window_ticks,
+                      alloc_backend=backend, serve_backend=serve_backend)
     args = stack_scenarios(scenarios)
     codes = jnp.asarray([FLEET_CONTROL_CODES[m] for m in MODES], jnp.int32)
 
@@ -95,6 +106,8 @@ def sweep(duration_s: float = 20.0, window_ticks: int = 10):
         "config": {
             "duration_s": duration_s,
             "window_ticks": window_ticks,
+            "alloc_backend": backend,
+            "serve_backend": serve_backend,
             "scenarios": names,
             "modes": list(MODES),
             "grid_shape": list(served.shape),
@@ -134,8 +147,13 @@ def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--out", default=None, help="also write the JSON here")
     ap.add_argument("--duration-s", type=float, default=20.0)
+    ap.add_argument("--backend", choices=("core", "pallas"), default="core",
+                    help="allocation backend (FleetConfig.alloc_backend)")
+    ap.add_argument("--serve", choices=("scan", "fused"), default="scan",
+                    help="window-service backend (FleetConfig.serve_backend)")
     args = ap.parse_args()
-    report = sweep(duration_s=args.duration_s)
+    report = sweep(duration_s=args.duration_s, backend=args.backend,
+                   serve_backend=args.serve)
     text = json.dumps(report, indent=2, default=float)
     print(text)
     if args.out:

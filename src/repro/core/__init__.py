@@ -1,7 +1,7 @@
 """AdapTBF core: the paper's decentralized adaptive token borrowing allocator."""
 from repro.core.adaptbf import allocate, fleet_allocate
 from repro.core.baselines import no_bw_allocate, static_allocate
-from repro.core.remainder import integerize, rank_desc
+from repro.core.remainder import integerize, rank_desc, topk_mask
 from repro.core.state import AllocatorState, init_fleet_state, init_state
 
 __all__ = [
@@ -11,6 +11,7 @@ __all__ = [
     "no_bw_allocate",
     "integerize",
     "rank_desc",
+    "topk_mask",
     "AllocatorState",
     "init_state",
     "init_fleet_state",

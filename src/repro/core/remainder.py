@@ -6,17 +6,100 @@ exactly equals the step's budget.  Fractional remainders are carried per job
 across steps and windows; flooring errors are corrected largest-remainder-first
 (+1 on leftover, -1 on excess), exactly as Section III-C.4 describes.
 
+Selection is O(J) in memory: the correction only ever needs *membership* of
+the top-k remainders (rank < k), never the dense rank itself, so ``topk_mask``
+finds the k-th largest key with a fixed 32-probe binary search on the float32
+bit pattern (a counting sum per probe) and breaks the tie at the threshold by
+job index with a log2(J)-probe search.  No argsort, no [J, J] comparison
+matrix -- the same code runs as plain XLA here and inside the Pallas
+allocation kernel (``kernels/adaptbf_alloc``), where the old rank matrix was
+the VMEM bottleneck (DESIGN.md section 6).
+
 All functions are jit/vmap-safe: fixed shapes, no data-dependent control flow.
+Batched inputs are supported along leading axes -- jobs live on the LAST axis
+and ``budget`` broadcasts against ``[..., 1]`` (scalar for the 1-D case).
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
+
+# plain Python int: a module-level jnp scalar would be a device constant the
+# Pallas kernel tracer rejects as a captured value
+_INT32_MIN = -(2**31)
+
+# bit width of the excess-correction round search: full take-one rounds per
+# job are bounded by max(floored), and float32 only represents integers
+# exactly up to 2^24, so 25 bits cover every representable excess
+_P_BITS = 25
 
 
 def rank_desc(key: jnp.ndarray) -> jnp.ndarray:
-    """Dense rank (0 = largest key). Ties broken by index (stable argsort)."""
+    """Dense rank (0 = largest key). Ties broken by index (stable argsort).
+
+    Kept as the sort-based reference for ``topk_mask`` (property tests assert
+    bitwise-equal membership); the hot paths below no longer rank anything.
+    """
     order = jnp.argsort(-key, stable=True)
     return jnp.zeros_like(order).at[order].set(jnp.arange(key.shape[0]))
+
+
+def _count(pred: jnp.ndarray) -> jnp.ndarray:
+    """[..., J] bool -> [..., 1] int32 count along the job axis."""
+    return jnp.sum(pred.astype(jnp.int32), axis=-1, keepdims=True)
+
+
+def topk_mask(key: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    """Membership of the ``k`` largest entries of ``key`` along the last axis.
+
+    Equivalent to ``rank_desc(key) < k`` per batch row (ties broken by lower
+    index first) but computed without sorting in O(J) memory:
+
+      1. map float32 keys onto int32 so integer order == float order
+         (negatives flip their low 31 bits; -0.0 is canonicalized to +0.0),
+      2. binary-search the k-th largest value bit by bit -- sign probe plus 31
+         magnitude probes, each a single masked counting sum,
+      3. entries strictly above the threshold are in; the remaining seats at
+         the threshold value go to the lowest indices, found by a second
+         bit-descent on the index (log2(J) probes).
+
+    Args:
+      key: [..., J] float32 keys; exclude entries by setting them to -inf
+        (callers still AND the result with their mask -- when k exceeds the
+        number of finite keys the boundary seats land on -inf entries,
+        mirroring how dense ranks past the masked set behaved).
+      k: [..., 1]-broadcastable integer count (k <= 0 selects nothing,
+        k >= J selects everything).
+
+    Returns:
+      [..., J] bool membership mask.
+    """
+    key = key.astype(jnp.float32)
+    # -0.0 must tie with +0.0 bitwise; a select survives XLA's algebraic
+    # simplifier where `key + 0.0` would be folded away under jit
+    key = jnp.where(key == 0.0, 0.0, key)
+    k = jnp.asarray(k, jnp.int32)
+    bits = jax.lax.bitcast_convert_type(key, jnp.int32)
+    ordv = jnp.where(bits >= 0, bits, bits ^ jnp.int32(0x7FFFFFFF))
+
+    # threshold = k-th largest ordv: keep the largest t with count(>= t) >= k
+    t = jnp.where(_count(ordv >= 0) >= k, jnp.int32(0), jnp.int32(_INT32_MIN))
+    for bit in range(30, -1, -1):
+        cand = t | jnp.int32(1 << bit)
+        t = jnp.where(_count(ordv >= cand) >= k, cand, t)
+
+    greater = ordv > t
+    equal = ordv == t
+    needed = k - _count(greater)  # seats left among the tied entries
+
+    # boundary tie-break: the `needed` lowest-index tied entries, via the
+    # largest index bound m with fewer than `needed` tied entries below it
+    idx = jax.lax.broadcasted_iota(jnp.int32, key.shape, key.ndim - 1)
+    m = jnp.zeros_like(t)
+    for bit in range(max(key.shape[-1] - 1, 1).bit_length() - 1, -1, -1):
+        cand = m | jnp.int32(1 << bit)
+        m = jnp.where(_count(equal & (idx < cand)) < needed, cand, m)
+    return greater | (equal & (idx <= m) & (needed > 0))
 
 
 def integerize(
@@ -29,14 +112,25 @@ def integerize(
     masked total equals ``budget`` exactly.
 
     Args:
-      raw:       [J] fractional token allocation for this step (0 where unmasked).
-      remainder: [J] carried remainders rho (updated only for masked jobs).
-      budget:    scalar integral total this step must distribute.
-      mask:      [J] bool, jobs participating in this step.
+      raw:       [..., J] fractional token allocation (0 where unmasked).
+      remainder: [..., J] carried remainders rho (updated only for masked jobs).
+      budget:    integral total each batch row must distribute ([..., 1]
+                 broadcastable; scalar in the 1-D case).
+      mask:      [..., J] bool, jobs participating in this step.
 
     Returns:
       (alloc, new_remainder): integer-valued float allocations summing to
       ``budget`` over the mask, and the updated remainder carry.
+
+    The largest-remainder correction is multi-round in both directions.
+    Leftover (+1) rounds hand at most one token per masked job, so a delta of
+    q * n_masked + r resolves to q tokens for every masked job plus the top-r
+    remainders -- exact for any delta, where the old explicit unrolling capped
+    out at three rounds.  Excess (-1) rounds may only take from jobs that
+    still hold a token, and eligibility shrinks as tokens are taken: p full
+    take-one-each rounds (p = the largest r whose cumulative take
+    sum(min(r, floored)) fits the excess, found by bit-descent) followed by a
+    partial top-k round over the jobs still holding more than p tokens.
     """
     raw = jnp.where(mask, raw, 0.0)
     x = jnp.where(mask, raw + remainder, 0.0)
@@ -46,22 +140,38 @@ def integerize(
     floored = jnp.maximum(jnp.floor(x), 0.0)
     rem = jnp.where(mask, x - floored, 0.0)
 
-    delta = jnp.round(budget - jnp.sum(floored))  # integral correction count
+    delta = jnp.round(budget - jnp.sum(floored, axis=-1, keepdims=True))
+    delta_i = jnp.clip(delta, -(2.0**30), 2.0**30).astype(jnp.int32)
+    n_masked = _count(mask)
+    neg_inf = jnp.float32(-jnp.inf)
+    fmask = mask.astype(jnp.float32)
 
-    neg_inf = jnp.asarray(-jnp.inf, raw.dtype)
-    # leftover: +1 to the largest-remainder masked jobs first (multi-round so
-    # corrections larger than the *masked* job count still conserve the
-    # budget -- masked jobs occupy the leading ranks, so each round hands out
-    # at most one token per masked job)
-    n_masked = jnp.sum(mask.astype(raw.dtype))
-    rank_up = rank_desc(jnp.where(mask, rem, neg_inf))
-    bump_up = jnp.zeros_like(raw)
-    for r in range(3):
-        bump_up = bump_up + jnp.where(mask & (rank_up < delta - r * n_masked),
-                                      1.0, 0.0)
-    # excess: -1 from the largest-remainder masked jobs that have >= 1 token
-    rank_dn = rank_desc(jnp.where(mask & (floored >= 1.0), rem, neg_inf))
-    bump_dn = jnp.where(mask & (floored >= 1.0) & (rank_dn < -delta), 1.0, 0.0)
+    # leftover: +1 to the largest-remainder masked jobs, q full rounds plus a
+    # partial top-k round
+    d_up = jnp.maximum(delta_i, 0)
+    q = d_up // jnp.maximum(n_masked, 1)
+    part = d_up - q * n_masked
+    sel_up = topk_mask(jnp.where(mask, rem, neg_inf), part) & mask
+    bump_up = q.astype(jnp.float32) * fmask + sel_up.astype(jnp.float32)
+
+    # excess: -1 from the largest-remainder jobs still holding >= 1 token.
+    # p = number of full take-one-from-every-eligible rounds; g(r) counts the
+    # tokens r such rounds remove (monotone in r -> bit-descent on r).
+    d_dn = jnp.maximum(-delta, 0.0)
+    mfloored = jnp.where(mask, floored, 0.0)
+
+    def _g(r):
+        return jnp.sum(jnp.minimum(mfloored, r), axis=-1, keepdims=True)
+
+    p = jnp.zeros_like(delta_i)
+    for bit in range(_P_BITS - 1, -1, -1):
+        cand = p | jnp.int32(1 << bit)
+        p = jnp.where(_g(cand.astype(jnp.float32)) <= d_dn, cand, p)
+    p_f = p.astype(jnp.float32)
+    k_dn = jnp.minimum(d_dn - _g(p_f), 2.0**30).astype(jnp.int32)
+    elig = mask & (floored >= p_f + 1.0)
+    sel_dn = topk_mask(jnp.where(elig, rem, neg_inf), k_dn) & elig
+    bump_dn = jnp.minimum(mfloored, p_f) + sel_dn.astype(jnp.float32)
 
     applied = jnp.where(delta > 0, bump_up, jnp.where(delta < 0, -bump_dn, 0.0))
     alloc = floored + applied

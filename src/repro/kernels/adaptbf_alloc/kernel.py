@@ -5,13 +5,16 @@ whole three-step algorithm (priority -> redistribution -> re-compensation,
 paper Section III-C) running in VMEM on the VPU.  The decentralization
 property is structural: every op is row-independent.
 
-The largest-remainder ranking is computed with an O(J^2) comparison matrix
-(tie-break by job index, identical to the stable-argsort rank in
-core/remainder.py) -- sort-free, vector-unit friendly, and exact.
+The largest-remainder correction reuses ``core/remainder.integerize``
+verbatim -- its ``topk_mask`` selection (fixed-probe binary search on the
+remainder threshold, index tie-break at the boundary) is sort-free,
+vector-unit friendly, exact, and O(J) in VMEM, so the kernel and the core
+allocator literally cannot drift apart.
 
 Block sizing: BLOCK_O x J with J padded to a lane multiple (128).  VMEM
-footprint ~ (10 arrays x BLOCK_O x J + BLOCK_O x J^2 rank matrix) x 4B;
-BLOCK_O=8, J=1024 -> ~34 MB exceeds VMEM, so ops.py drops BLOCK_O as J grows.
+footprint ~ 16 live [BLOCK_O, J] f32 arrays (see ops._block_o); BLOCK_O=8
+holds out to J=16384, where the old [BLOCK_O, J, J] rank matrix forced
+BLOCK_O=1 by J~1448 and made J=4096 (64 MB) impossible at any block size.
 """
 from __future__ import annotations
 
@@ -21,42 +24,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.remainder import integerize as _integerize
+
 _EPS = 1e-12
-
-
-def _rank_desc(key):
-    """[O, J] -> dense rank by key desc, ties by index asc (stable)."""
-    o, j = key.shape
-    idx = jax.lax.broadcasted_iota(jnp.int32, (1, j, 1), 1)   # i
-    jdx = jax.lax.broadcasted_iota(jnp.int32, (1, 1, j), 2)   # j
-    ki = key[:, :, None]
-    kj = key[:, None, :]
-    cmp = (kj > ki) | ((kj == ki) & (jdx < idx))
-    return cmp.sum(axis=-1).astype(key.dtype)                 # [O, J]
-
-
-def _integerize(raw, rem, budget, mask):
-    """2-D version of core/remainder.integerize.  budget: [O, 1]."""
-    raw = jnp.where(mask, raw, 0.0)
-    x = jnp.where(mask, raw + rem, 0.0)
-    floored = jnp.maximum(jnp.floor(x), 0.0)
-    frac = jnp.where(mask, x - floored, 0.0)
-    delta = jnp.round(budget - jnp.sum(floored, axis=-1, keepdims=True))
-
-    neg_inf = jnp.float32(-jnp.inf)
-    # multi-round by *masked* count, matching core/remainder.integerize
-    n_masked = jnp.sum(mask.astype(raw.dtype), axis=-1, keepdims=True)
-    rank_up = _rank_desc(jnp.where(mask, frac, neg_inf))
-    bump_up = jnp.zeros_like(raw)
-    for r in range(3):
-        bump_up = bump_up + jnp.where(mask & (rank_up < delta - r * n_masked),
-                                      1.0, 0.0)
-    elig = mask & (floored >= 1.0)
-    rank_dn = _rank_desc(jnp.where(elig, frac, neg_inf))
-    bump_dn = jnp.where(elig & (rank_dn < -delta), 1.0, 0.0)
-
-    applied = jnp.where(delta > 0, bump_up, jnp.where(delta < 0, -bump_dn, 0.0))
-    return floored + applied, jnp.where(mask, frac - applied, rem)
 
 
 def _alloc_block(demand, nodes, record, remainder, alloc_prev, capacity,

@@ -4,34 +4,23 @@ Pallas kernel (TPU, or interpret mode when forced) or the vmapped core
 allocator."""
 from __future__ import annotations
 
-import os
-
-import jax
-import jax.numpy as jnp
-
 from repro.kernels.adaptbf_alloc import ref
 from repro.kernels.adaptbf_alloc.kernel import fleet_alloc_pallas
-
-_FORCE_REF = os.environ.get("REPRO_FORCE_REF_KERNELS", "0") == "1"
-
-
-def _on_tpu() -> bool:
-    return (not _FORCE_REF) and jax.default_backend() == "tpu"
-
-
-def _pad_to(x, m, axis, value=0.0):
-    pad = (-x.shape[axis]) % m
-    if pad == 0:
-        return x
-    cfg = [(0, 0)] * x.ndim
-    cfg[axis] = (0, pad)
-    return jnp.pad(x, cfg, constant_values=value)
+from repro.kernels.dispatch import on_tpu as _on_tpu
+from repro.kernels.dispatch import pad_lanes as _pad_lanes
+from repro.kernels.dispatch import pad_to as _pad_to
 
 
 def _block_o(j: int) -> int:
-    # keep the [block_o, J, J] rank matrix under ~8 MB of VMEM (f32)
+    """Largest OST block whose working set fits comfortably in VMEM.
+
+    The top-k selection in core/remainder keeps ~16 live [block_o, J] f32
+    arrays (inputs, outputs, selection temporaries) -- O(J) per row, so
+    block_o stays 8 out to J=16384.  The old [block_o, J, J] rank matrix
+    bound forced block_o=1 by J~1448 and could not fit J=4096 at all.
+    """
     for b in (8, 4, 2, 1):
-        if b * j * j * 4 <= 8 * 2**20:
+        if 16 * b * j * 4 <= 8 * 2**20:
             return b
     return 1
 
@@ -42,7 +31,7 @@ def fleet_alloc(demand, nodes, record, remainder, alloc_prev, capacity,
     if interpret is None:
         interpret = not _on_tpu()
     o, j = demand.shape
-    jp = max(128, j + (-j) % 128)
+    jp = _pad_lanes(j)
     bo = _block_o(jp)
     args = [_pad_to(_pad_to(x, jp, 1), bo, 0)
             for x in (demand, nodes, record, remainder, alloc_prev)]

@@ -2,17 +2,8 @@
 numerically-identical jnp oracle elsewhere (CPU tests, dry-run lowering)."""
 from __future__ import annotations
 
-import os
-
-import jax
-
 from repro.kernels.attention import ref
-
-_FORCE_REF = os.environ.get("REPRO_FORCE_REF_KERNELS", "0") == "1"
-
-
-def _on_tpu() -> bool:
-    return (not _FORCE_REF) and jax.default_backend() == "tpu"
+from repro.kernels.dispatch import on_tpu as _on_tpu
 
 
 def attention(q, k, v, *, causal: bool = True):

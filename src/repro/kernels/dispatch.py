@@ -1,0 +1,34 @@
+"""Shared dispatch helpers for the kernel packages.
+
+Every ``ops.py`` dispatcher needs the same three things: the
+``REPRO_FORCE_REF_KERNELS`` escape hatch (read once at import, before any
+kernel module -- ``tests/conftest.py`` sets it ahead of imports off-TPU),
+the TPU predicate, and padding to hardware-friendly block multiples.  One
+definition here so the packages cannot drift."""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+FORCE_REF = os.environ.get("REPRO_FORCE_REF_KERNELS", "0") == "1"
+
+
+def on_tpu() -> bool:
+    return (not FORCE_REF) and jax.default_backend() == "tpu"
+
+
+def pad_to(x, m, axis, value=0.0):
+    """Zero-extend (or ``value``-extend) ``x`` so ``x.shape[axis] % m == 0``."""
+    pad = (-x.shape[axis]) % m
+    if pad == 0:
+        return x
+    cfg = [(0, 0)] * x.ndim
+    cfg[axis] = (0, pad)
+    return jnp.pad(x, cfg, constant_values=value)
+
+
+def pad_lanes(j: int) -> int:
+    """Job-axis size padded up to the TPU lane multiple (128)."""
+    return max(128, j + (-j) % 128)

@@ -1,0 +1,5 @@
+"""Fused window-service kernel: all ticks of one observation window of
+two-phase NRS-TBF service for a block of OSTs in a single Pallas invocation."""
+from repro.kernels.fleet_window.ops import fleet_window_serve
+
+__all__ = ["fleet_window_serve"]

@@ -1,0 +1,24 @@
+"""Oracle for the fused window-service kernel: the simulator's own per-tick
+machinery -- a ``lax.scan`` over ticks of ``_serve_tick`` vmapped over the
+OST axis.  The fused kernel must match this (same ops, same order)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.storage.simulator import _serve_tick
+
+
+def fleet_window_ref(queue, vol_left, budget, rates, backlog_cap, cap_tick):
+    """queue/vol_left/budget/backlog_cap: [O, J]; rates: [W, O, J];
+    cap_tick: [O].  Returns (queue, vol_left, served_window)."""
+    serve = jax.vmap(_serve_tick)
+
+    def tick_fn(carry, rate_t):
+        q, v, b = carry
+        q, v, b, served, _ = serve(q, v, b, rate_t, backlog_cap, cap_tick)
+        return (q, v, b), served
+
+    (q, v, _), served_t = jax.lax.scan(
+        tick_fn, (queue, vol_left, budget), rates)
+    return q, v, served_t.sum(axis=0)

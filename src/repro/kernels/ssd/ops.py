@@ -2,17 +2,8 @@
 elsewhere (CPU tests, dry-run lowering)."""
 from __future__ import annotations
 
-import os
-
-import jax
-
+from repro.kernels.dispatch import on_tpu as _on_tpu
 from repro.kernels.ssd import ref
-
-_FORCE_REF = os.environ.get("REPRO_FORCE_REF_KERNELS", "0") == "1"
-
-
-def _on_tpu() -> bool:
-    return (not _FORCE_REF) and jax.default_backend() == "tpu"
 
 
 def ssd(x, dt, a, B, C, d_skip=None, initial_state=None, chunk: int = 64):

@@ -42,11 +42,13 @@ Two entry points share the tick/window machinery below:
   a fleet run bitwise-matches independent single-OST runs on the same
   per-OST demand (tested in ``tests/test_fleet_sim.py``).
 
-Both are a ``lax.scan`` over windows with an inner scan over ticks --
-jittable end to end.  ``simulate_fleet`` additionally takes a traced
-``control_code`` path (``FLEET_CONTROL_CODES``) so a benchmark sweep can
-``vmap`` one compiled program over scenarios x control modes
-(``benchmarks/fleet_sweep.py``).
+Both are a ``lax.scan`` over windows -- jittable end to end.  The inner
+per-tick loop is either a ``lax.scan`` of small ops (``serve_backend="scan"``)
+or one fused whole-window kernel invocation per window
+(``serve_backend="fused"``, ``kernels/fleet_window``; fleet only).
+``simulate_fleet`` additionally takes a traced ``control_code`` path
+(``FLEET_CONTROL_CODES``) so a benchmark sweep can ``vmap`` one compiled
+program over scenarios x control modes (``benchmarks/fleet_sweep.py``).
 """
 from __future__ import annotations
 
@@ -86,6 +88,9 @@ class FleetConfig(NamedTuple):
     integer_tokens: bool = True
     max_backlog: float = 256.0
     alloc_backend: str = "core"        # core (vmap) | pallas (kernel)
+    serve_backend: str = "scan"        # scan (per-tick lax.scan) | fused
+                                       #   (whole-window kernel, one
+                                       #   invocation per window)
 
 
 class SimResult(NamedTuple):
@@ -134,10 +139,15 @@ def _window_capacity(cfg) -> float:
 
 
 def _serve_tick(queue, vol_left, budget, rate_t, backlog_cap, capacity):
-    """One tick on ONE storage target: client issuance into the server-side
-    queue, then two-phase NRS-TBF service.  All arrays [J]; ``capacity`` is
-    the per-tick scalar.  The fleet path is this exact function vmapped over
-    the OST axis (decentralization is structural)."""
+    """One tick of two-phase NRS-TBF service: client issuance into the
+    server-side queue, then token-gated service and opportunistic fallback.
+
+    Shape-generic over leading axes: jobs live on the LAST axis and
+    ``capacity`` broadcasts against ``[..., 1]`` (a scalar for one target).
+    The fleet scan path vmaps the 1-D form over the OST axis and the fused
+    window kernel (``kernels/fleet_window``) calls the 2-D form directly --
+    one definition, so the service discipline cannot drift between backends
+    (decentralization stays structural: no op mixes jobs across rows)."""
     headroom = jnp.maximum(backlog_cap - queue, 0.0)
     issued = jnp.minimum(jnp.minimum(rate_t, vol_left), headroom)
     queue = queue + issued
@@ -146,11 +156,14 @@ def _serve_tick(queue, vol_left, budget, rate_t, backlog_cap, capacity):
     ruled = jnp.isfinite(budget)
     # phase 1: token-gated service for ruled jobs
     want1 = jnp.where(ruled, jnp.minimum(queue, jnp.maximum(budget, 0.0)), 0.0)
-    s1 = want1 * jnp.minimum(1.0, capacity / jnp.maximum(want1.sum(), _EPS))
+    s1 = want1 * jnp.minimum(1.0, capacity / jnp.maximum(
+        jnp.sum(want1, axis=-1, keepdims=True), _EPS))
     # phase 2: fallback queue served from idle capacity only
-    spare = jnp.maximum(capacity - s1.sum(), 0.0)
+    spare = jnp.maximum(
+        capacity - jnp.sum(s1, axis=-1, keepdims=True), 0.0)
     want2 = jnp.where(ruled, 0.0, queue)
-    s2 = want2 * jnp.minimum(1.0, spare / jnp.maximum(want2.sum(), _EPS))
+    s2 = want2 * jnp.minimum(1.0, spare / jnp.maximum(
+        jnp.sum(want2, axis=-1, keepdims=True), _EPS))
     # proportional scaling can overshoot the queue by an ulp; clamping keeps
     # cumulative served <= cumulative issued over long horizons
     served = jnp.minimum(s1 + s2, queue)
@@ -205,18 +218,19 @@ def simulate(
 
     def tick_fn(carry, rate_t):
         queue, vol_left, budget = carry
-        queue, vol_left, budget, served, issued = _serve_tick(
+        queue, vol_left, budget, served, _ = _serve_tick(
             queue, vol_left, budget, rate_t, backlog_cap,
             cfg.capacity_per_tick)
-        return (queue, vol_left, budget), (served, issued)
+        return (queue, vol_left, budget), served
 
     def window_fn(carry, rates_w):
         queue, vol_left, astate, alloc = carry
         budget0 = _gate_budget(cfg.control, alloc)
-        (queue, vol_left, _), (served_t, issued_t) = jax.lax.scan(
+        (queue, vol_left, _), served_t = jax.lax.scan(
             tick_fn, (queue, vol_left, budget0), rates_w
         )
-        demand = served_t.sum(axis=0) + queue
+        served_w = served_t.sum(axis=0)
+        demand = served_w + queue
         if cfg.control == "adaptbf":
             astate, alloc_next = adaptbf.allocate(
                 astate, demand, nodes, cap_w,
@@ -226,7 +240,7 @@ def simulate(
             alloc_next = static_alloc
         else:  # nobw
             alloc_next = unruled
-        out = (served_t.sum(axis=0), demand, alloc, astate.record)
+        out = (served_w, demand, alloc, astate.record)
         return (queue, vol_left, astate, alloc_next), out
 
     astate0 = init_state(n_jobs)
@@ -338,9 +352,24 @@ def simulate_fleet(
 
     def tick_fn(carry, rate_t):
         queue, vol_left, budget = carry
-        queue, vol_left, budget, served, issued = serve_tick(
+        queue, vol_left, budget, served, _ = serve_tick(
             queue, vol_left, budget, rate_t, backlog_cap, cap_tick_col)
-        return (queue, vol_left, budget), (served, issued)
+        return (queue, vol_left, budget), served
+
+    def serve_window(queue, vol_left, budget0, rates_w):
+        """All ticks of one window -> (queue, vol_left, served_window)."""
+        if cfg.serve_backend == "fused":
+            # imported lazily: the kernel path pulls in pallas machinery
+            # that the plain scan backend never needs
+            from repro.kernels.fleet_window import ops as window_ops
+            return window_ops.fleet_window_serve(
+                queue, vol_left, budget0, rates_w, backlog_cap, cap_tick)
+        if cfg.serve_backend == "scan":
+            (queue, vol_left, _), served_t = jax.lax.scan(
+                tick_fn, (queue, vol_left, budget0), rates_w
+            )
+            return queue, vol_left, served_t.sum(axis=0)
+        raise ValueError(f"unknown serve_backend: {cfg.serve_backend!r}")
 
     def next_alloc(astate, demand):
         """Control-mode dispatch.  Static modes resolve at trace time; the
@@ -372,12 +401,11 @@ def simulate_fleet(
     def window_fn(carry, rates_w):
         queue, vol_left, astate, alloc = carry
         budget0 = gate(alloc)
-        (queue, vol_left, _), (served_t, issued_t) = jax.lax.scan(
-            tick_fn, (queue, vol_left, budget0), rates_w
-        )
-        demand = served_t.sum(axis=0) + queue
+        queue, vol_left, served_w = serve_window(
+            queue, vol_left, budget0, rates_w)
+        demand = served_w + queue
         astate, alloc_next = next_alloc(astate, demand)
-        out = (served_t.sum(axis=0), demand, alloc, astate.record)
+        out = (served_w, demand, alloc, astate.record)
         return (queue, vol_left, astate, alloc_next), out
 
     astate0 = init_fleet_state(n_ost, n_jobs)

@@ -44,6 +44,27 @@ def test_capacity_sweep(cap):
         assert total == pytest.approx(cap if act[row].any() else 0.0, abs=0.01)
 
 
+def test_block_o_stays_wide_at_fleet_scale():
+    """O(J)-memory selection: the dispatcher keeps 8-row blocks out to
+    J=4096 (and beyond), where the old [block_o, J, J] rank matrix forced
+    block_o=1 by J~1448 and could not fit J=4096 at any block size."""
+    assert ops._block_o(128) == 8
+    assert ops._block_o(1536) == 8
+    assert ops._block_o(4096) >= 4
+
+
+@pytest.mark.slow
+def test_runs_at_j4096_matching_oracle():
+    """The acceptance shape the rank-matrix kernel could never allocate."""
+    o, j = 2, 4096
+    args = _case(o, j, seed=97, cap=50000.0)
+    a_k, rec_k, rem_k = ops.fleet_alloc(*args, interpret=True)
+    a_r, rec_r, rem_r, _ = ops.fleet_alloc_ref(*args)
+    np.testing.assert_allclose(np.asarray(a_k), np.asarray(a_r), atol=1e-3)
+    np.testing.assert_allclose(np.asarray(rec_k), np.asarray(rec_r), atol=1e-3)
+    np.testing.assert_allclose(np.asarray(rem_k), np.asarray(rem_r), atol=1e-3)
+
+
 def test_multi_window_state_evolution():
     """Drive the kernel across windows; records must stay zero-sum and the
     trajectory must match the oracle step for step."""

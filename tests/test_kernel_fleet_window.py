@@ -1,0 +1,99 @@
+"""Fused window-service kernel vs the simulator's per-tick scan oracle:
+shape/padding sweep in interpret mode, XLA-fallback parity, and end-to-end
+``simulate_fleet`` equivalence between the scan and fused serve backends."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.fleet_window import ops
+from repro.storage import FleetConfig, simulate_fleet
+
+
+def _case(o, j, w, seed, unruled_frac=0.5):
+    rng = np.random.default_rng(seed)
+    queue = (rng.random((o, j)) * 12).astype(np.float32)
+    vol_left = np.where(rng.random((o, j)) < 0.3, np.inf,
+                        rng.integers(0, 200, (o, j))).astype(np.float32)
+    budget = np.where(rng.random((o, j)) < unruled_frac, np.inf,
+                      rng.integers(0, 30, (o, j))).astype(np.float32)
+    rates = rng.integers(0, 3, (w, o, j)).astype(np.float32)
+    backlog = rng.choice([16.0, 64.0, 256.0], (o, j)).astype(np.float32)
+    cap = rng.integers(4, 40, (o,)).astype(np.float32)
+    return tuple(jnp.asarray(x)
+                 for x in (queue, vol_left, budget, rates, backlog, cap))
+
+
+def _assert_matches(got, want, atol=1e-4):
+    for name, g, w in zip(("queue", "vol_left", "served"), got, want):
+        g, w = np.asarray(g), np.asarray(w)
+        np.testing.assert_array_equal(np.isfinite(g), np.isfinite(w),
+                                      err_msg=name)
+        fin = np.isfinite(g)
+        np.testing.assert_allclose(g[fin], w[fin], atol=atol, err_msg=name)
+
+
+@pytest.mark.parametrize("o,j,w", [(1, 4, 1), (3, 16, 10), (8, 128, 10),
+                                   (17, 100, 7), (5, 300, 10)])
+def test_kernel_matches_tick_scan_oracle(o, j, w):
+    """Interpret-mode Pallas kernel vs the lax.scan of vmapped _serve_tick."""
+    args = _case(o, j, w, seed=o * 1000 + j + w)
+    got = ops.fleet_window_serve(*args, interpret=True)
+    want = ops.fleet_window_ref(*args)
+    _assert_matches(got, want)
+
+
+@pytest.mark.parametrize("o,j,w", [(3, 16, 10), (8, 128, 10), (17, 100, 7)])
+def test_xla_fallback_matches_tick_scan_oracle(o, j, w):
+    """The no-stack scan fallback (what CPU/GPU fleets actually run)."""
+    args = _case(o, j, w, seed=o * 31 + j)
+    got = ops.fleet_window_serve(*args)  # auto-routes to fused XLA off-TPU
+    want = ops.fleet_window_ref(*args)
+    _assert_matches(got, want)
+
+
+def test_all_unruled_and_all_ruled_extremes():
+    for frac in (0.0, 1.0):
+        args = _case(4, 64, 10, seed=int(frac * 7) + 2, unruled_frac=frac)
+        got = ops.fleet_window_serve(*args, interpret=True)
+        want = ops.fleet_window_ref(*args)
+        _assert_matches(got, want)
+
+
+def test_capacity_never_exceeded_per_tick_times_window():
+    args = _case(6, 80, 10, seed=11)
+    _, _, served = ops.fleet_window_serve(*args, interpret=True)
+    cap = np.asarray(args[5])
+    per_ost = np.asarray(served).sum(axis=-1)
+    assert (per_ost <= cap * 10 + 1e-3).all()
+
+
+def test_simulate_fleet_fused_matches_scan_end_to_end():
+    """serve_backend="fused" must reproduce the scan backend's trajectory
+    (to fp accumulation noise; integer token state stays exactly equal)."""
+    rng = np.random.default_rng(5)
+    o, j, t = 6, 48, 60
+    nodes = jnp.asarray(rng.integers(1, 32, (j,)), jnp.float32)
+    rates = jnp.asarray(rng.integers(0, 4, (t, o, j)), jnp.float32)
+    vol = jnp.where(jnp.asarray(rng.random((o, j))) < 0.5, jnp.inf,
+                    500.0).astype(jnp.float32)
+    caps = jnp.asarray(rng.integers(5, 25, (o,)), jnp.float32)
+    for control in ("adaptbf", "static", "nobw"):
+        res = {}
+        for serve in ("scan", "fused"):
+            cfg = FleetConfig(control=control, serve_backend=serve)
+            res[serve] = simulate_fleet(cfg, nodes, rates, vol, caps)
+        for field in ("served", "demand", "alloc", "record", "queue_final"):
+            a = np.asarray(getattr(res["scan"], field))
+            b = np.asarray(getattr(res["fused"], field))
+            np.testing.assert_array_equal(np.isfinite(a), np.isfinite(b),
+                                          err_msg=f"{control}/{field}")
+            fin = np.isfinite(a)
+            np.testing.assert_allclose(a[fin], b[fin], atol=1e-3,
+                                       err_msg=f"{control}/{field}")
+
+
+def test_unknown_serve_backend_rejected():
+    cfg = FleetConfig(serve_backend="warp")
+    with pytest.raises(ValueError, match="serve_backend"):
+        simulate_fleet(cfg, jnp.ones(4), jnp.ones((10, 2, 4)),
+                       jnp.full((2, 4), jnp.inf))

@@ -134,9 +134,13 @@ class TestRecompensationIVF:
         # job0 (20 s delay): lends in phase 1, repaid after stream starts
         assert r0[100] > 50
         assert abs(r0[400]) < r0[100] * 0.3
-        # job2 (80 s delay, smallest bursts): lends until ~80 s, then repaid
+        # job2 (80 s delay, smallest bursts): lends until ~80 s, then repaid.
+        # The multi-round remainder-correction fix (DESIGN.md section 6) made
+        # every window exactly budget-conserving; job2 now lends ~2x more in
+        # phase 1 than under the old leaky correction, so the bounded-reclaim
+        # repayment covers a smaller fraction of it within this horizon.
         assert r2[600] > 10
-        assert abs(r2[1050]) < r2[600] * 0.5
+        assert abs(r2[1050]) < r2[600] * 0.75
         # job3 (hog): borrows early (negative record), repays by the end
         assert r3[100] < -50
         assert r3[1050] > -10
