@@ -1,25 +1,32 @@
 """Fleet-scale parameter sweep: every registered fleet scenario x every
-control mode (adaptbf / static / nobw) in ONE vmapped, jitted invocation.
+registered control policy in ONE vmapped, jitted invocation.
 
 Scenarios are padded to a common (T, O, J) shape and stacked on a scenario
-axis; the control mode rides the traced ``control_code`` path of
-``simulate_fleet``, so the whole [S, C] grid is a single compiled program:
+axis; the policy rides the traced ``control_code`` path of
+``simulate_fleet`` (the generic ``CodedPolicy`` combinator over the chosen
+subset), so the whole [S, C] grid is a single compiled program:
 
-    run = jit(vmap_scenarios(vmap_modes(simulate_fleet)))
+    run = jit(vmap_scenarios(vmap_policies(simulate_fleet)))
 
-Emits a JSON report with utilization + fairness metrics per (scenario, mode)
-and adaptbf-vs-baseline comparisons.
+A policy registered via ``@register_policy`` shows up in the grid with no
+change here and none in the engine.  Emits a JSON report with utilization,
+fairness (Jain), backlog-tail, and per-job slowdown metrics per
+(scenario, policy), adaptbf-vs-baseline comparisons, and provenance (jax
+version, git SHA, full config).
 
 Run:  PYTHONPATH=src python benchmarks/fleet_sweep.py [--out report.json]
                                                       [--duration-s 20]
                                                       [--backend core|pallas]
                                                       [--serve scan|fused]
+                                                      [--policies adaptbf static ...]
 """
 from __future__ import annotations
 
 import argparse
 import functools
 import json
+import subprocess
+import sys
 import time
 
 import jax
@@ -27,15 +34,34 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.storage import (
-    FLEET_CONTROL_CODES,
     FleetConfig,
     get_scenario,
     list_fleet_scenarios,
+    list_policies,
     simulate_fleet,
 )
 from repro.storage import metrics
 
-MODES = tuple(sorted(FLEET_CONTROL_CODES, key=FLEET_CONTROL_CODES.get))
+BASELINE_TRIO = ("adaptbf", "static", "nobw")
+
+
+def git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            timeout=10, check=True).stdout.strip()
+    except Exception:
+        return "unknown"
+
+
+def provenance(cfg: FleetConfig) -> dict:
+    return {
+        "jax_version": jax.__version__,
+        "jax_backend": jax.default_backend(),
+        "git_sha": git_sha(),
+        "argv": sys.argv,
+        "fleet_config": cfg._asdict(),
+    }
 
 
 def _pad_axis(x: np.ndarray, size: int, axis: int, value=0.0) -> np.ndarray:
@@ -87,13 +113,16 @@ def build_sweep(cfg: FleetConfig):
 
 
 def sweep(duration_s: float = 20.0, window_ticks: int = 10,
-          backend: str = "core", serve_backend: str = "scan"):
+          backend: str = "core", serve_backend: str = "scan",
+          policies=None):
+    policies = tuple(policies) if policies else tuple(list_policies())
     names = list_fleet_scenarios()
     scenarios = [get_scenario(n, duration_s=duration_s) for n in names]
     cfg = FleetConfig(control="coded", window_ticks=window_ticks,
-                      alloc_backend=backend, serve_backend=serve_backend)
+                      alloc_backend=backend, serve_backend=serve_backend,
+                      coded_policies=policies)
     args = stack_scenarios(scenarios)
-    codes = jnp.asarray([FLEET_CONTROL_CODES[m] for m in MODES], jnp.int32)
+    codes = jnp.arange(len(policies), dtype=jnp.int32)
 
     run = build_sweep(cfg)
     t0 = time.perf_counter()
@@ -109,10 +138,11 @@ def sweep(duration_s: float = 20.0, window_ticks: int = 10,
             "alloc_backend": backend,
             "serve_backend": serve_backend,
             "scenarios": names,
-            "modes": list(MODES),
+            "policies": list(policies),
             "grid_shape": list(served.shape),
             "wall_s_one_invocation": wall_s,
         },
+        "provenance": provenance(cfg),
         "results": {},
     }
     for si, (name, scn) in enumerate(zip(names, scenarios)):
@@ -120,25 +150,34 @@ def sweep(duration_s: float = 20.0, window_ticks: int = 10,
         n_ost = scn.n_ost
         cap_w = scn.capacity_per_tick * window_ticks
         per_mode = {}
-        for ci, mode in enumerate(MODES):
+        for ci, mode in enumerate(policies):
             s = served[si, ci, :, :n_ost, :n_jobs]
             d = demand[si, ci, :, :n_ost, :n_jobs]
+            slow = metrics.job_slowdown(s, cap_w)
             per_mode[mode] = {
                 "aggregate_mb": metrics.aggregate_mb(s),
                 "mean_utilization": metrics.mean_utilization(s, cap_w),
                 "fairness_jain": metrics.fairness(       # aggregate over OSTs
                     s.sum(axis=1), scn.nodes, d.sum(axis=1)),
                 "p99_backlog_growth": metrics.p99_queue(d, s),
+                "slowdown_mean": float(np.nanmean(slow))
+                    if np.isfinite(slow).any() else None,
+                "slowdown_max": float(np.nanmax(slow))
+                    if np.isfinite(slow).any() else None,
             }
-        ad, st, nb = (per_mode[m] for m in ("adaptbf", "static", "nobw"))
-        per_mode["adaptbf_vs_baselines"] = {
-            "throughput_gain_vs_static":
-                ad["aggregate_mb"] / max(st["aggregate_mb"], 1e-9),
-            "utilization_gain_vs_static":
-                ad["mean_utilization"] / max(st["mean_utilization"], 1e-9),
-            "fairness_gain_vs_nobw":
-                ad["fairness_jain"] / max(nb["fairness_jain"], 1e-9),
-        }
+        if all(m in per_mode for m in BASELINE_TRIO):
+            ad, st, nb = (per_mode[m] for m in BASELINE_TRIO)
+            per_mode["adaptbf_vs_baselines"] = {
+                "throughput_gain_vs_static":
+                    ad["aggregate_mb"] / max(st["aggregate_mb"], 1e-9),
+                "utilization_gain_vs_static":
+                    ad["mean_utilization"] / max(st["mean_utilization"], 1e-9),
+                "fairness_gain_vs_nobw":
+                    ad["fairness_jain"] / max(nb["fairness_jain"], 1e-9),
+                "slowdown_gain_vs_static":
+                    (st["slowdown_mean"] / max(ad["slowdown_mean"], 1e-9))
+                    if ad["slowdown_mean"] and st["slowdown_mean"] else None,
+            }
         report["results"][name] = per_mode
     return report
 
@@ -151,9 +190,18 @@ def main():
                     help="allocation backend (FleetConfig.alloc_backend)")
     ap.add_argument("--serve", choices=("scan", "fused"), default="scan",
                     help="window-service backend (FleetConfig.serve_backend)")
+    ap.add_argument("--policies", nargs="+", default=None,
+                    metavar="NAME", help="policy subset to sweep (default: "
+                    "every registered policy); names from "
+                    "repro.storage.list_policies()")
     args = ap.parse_args()
+    if args.policies:
+        unknown = set(args.policies) - set(list_policies())
+        if unknown:
+            ap.error(f"unknown policies {sorted(unknown)}; "
+                     f"registered: {list_policies()}")
     report = sweep(duration_s=args.duration_s, backend=args.backend,
-                   serve_backend=args.serve)
+                   serve_backend=args.serve, policies=args.policies)
     text = json.dumps(report, indent=2, default=float)
     print(text)
     if args.out:

@@ -1,11 +1,12 @@
 """Fleet-scale decentralized bandwidth control, end to end.
 
 Part 1 drives the full multi-OST storage simulator (``simulate_fleet``) on
-the noisy-neighbor scenario from the registry: a single-node job hammers two
-stripes of an 8-OST fleet while four wide-striped jobs sweep all targets.
-Every OST runs the AdapTBF allocator independently -- no cross-OST
-communication -- yet the noisy job is confined to its 1-node share on its own
-stripe set and the fleet stays near fully utilized.
+the noisy-neighbor scenario from the registry, under EVERY control policy in
+the registry (``repro.storage.list_policies()``) -- the paper's trio plus
+the work-conserving static variant and the AIMD feedback throttler.  Every
+OST runs its policy independently -- no cross-OST communication -- yet under
+adaptbf the noisy job is confined to its 1-node share on its own stripe set
+while the fleet stays near fully utilized.
 
 Part 2 shows the raw allocator at leadership-class scale (1024 OSTs x 256
 jobs in one device call) via the Pallas kernel path's dispatching wrapper.
@@ -19,15 +20,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.adaptbf_alloc import ops
-from repro.storage import FleetConfig, get_scenario, metrics, simulate_fleet, utilization
+from repro.storage import (FleetConfig, get_scenario, list_policies, metrics,
+                           simulate_fleet, utilization)
 
 # ------------------------------------------------ part 1: fleet simulation
 
 scn = get_scenario("fleet_noisy_neighbor", duration_s=20.0)
 print(f"scenario {scn.name}: {scn.n_ost} OSTs x {scn.nodes.shape[0]} jobs, "
-      f"{scn.issue_rate.shape[0]} ticks")
+      f"{scn.issue_rate.shape[0]} ticks; policies: {list_policies()}")
 results = {}
-for control in ("adaptbf", "static", "nobw"):
+for control in list_policies():
     cfg = FleetConfig(control=control)
     res = simulate_fleet(
         cfg, jnp.asarray(scn.nodes), jnp.asarray(scn.issue_rate),

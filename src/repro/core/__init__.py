@@ -1,6 +1,16 @@
 """AdapTBF core: the paper's decentralized adaptive token borrowing allocator."""
 from repro.core.adaptbf import allocate, fleet_allocate
 from repro.core.baselines import no_bw_allocate, static_allocate
+from repro.core.policies import (
+    CodedPolicy,
+    ControlPolicy,
+    PolicyContext,
+    WindowObs,
+    control_codes,
+    get_policy,
+    list_policies,
+    register_policy,
+)
 from repro.core.remainder import integerize, rank_desc, topk_mask
 from repro.core.state import AllocatorState, init_fleet_state, init_state
 
@@ -9,6 +19,14 @@ __all__ = [
     "fleet_allocate",
     "static_allocate",
     "no_bw_allocate",
+    "CodedPolicy",
+    "ControlPolicy",
+    "PolicyContext",
+    "WindowObs",
+    "control_codes",
+    "get_policy",
+    "list_policies",
+    "register_policy",
     "integerize",
     "rank_desc",
     "topk_mask",

@@ -1,0 +1,379 @@
+"""Pluggable control policies for the windowed storage engine.
+
+A ``ControlPolicy`` is the *control discipline* the engine consults once per
+observation window: how the very first window is gated before any demand has
+been observed (``init_alloc``), how the previous window's allocation becomes
+a token budget (``gate``), and how the next allocation is computed from what
+the window revealed (``step``).  All methods operate on ``[O, J]`` state --
+one row per storage target, one column per job -- and MUST keep the paper's
+decentralization property: no operation may mix rows.  The single-target
+simulator is simply the ``O = 1`` view of the same engine.
+
+Policies are registered by name::
+
+    @register_policy("my_policy")
+    class MyPolicy(ControlPolicy):
+        def init_alloc(self, ctx): ...
+        def step(self, state, obs, ctx): ...
+
+and resolved by the engine through ``get_policy`` -- adding a comparison
+discipline never touches the engine (the policy surface motivated by
+software-defined QoS control, arXiv:1805.06161).
+
+``CodedPolicy`` is the generic traced-mode combinator: it evaluates every
+member policy each window and element-wise selects by the runtime
+``ctx.control_code``, so one compiled program can ``vmap`` a whole
+scenarios x policies benchmark grid (``benchmarks/fleet_sweep.py``).
+
+Built-in policies:
+
+* ``adaptbf``   -- the paper's adaptive token borrowing allocator (core vmap
+                   or the Pallas kernel, ``ctx.alloc_backend``).
+* ``static``    -- static TBF rules sized by global priority share.
+* ``nobw``      -- no rules at all (backlog-proportional FCFS fallback).
+* ``static_wc`` -- work-conserving static TBF: shares stay static but each
+                   window's unused share is re-granted to backlogged jobs.
+* ``aimd``      -- additive-increase / multiplicative-decrease feedback
+                   throttler driven by server-side saturation, in the spirit
+                   of feedback-control throttling for shared storage
+                   congestion (arXiv:2511.16177).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import adaptbf, baselines
+from repro.core.state import AllocatorState, init_fleet_state
+
+_EPS = 1e-9
+
+
+class PolicyContext(NamedTuple):
+    """Per-run data every policy method receives.
+
+    nodes:          [O, J] compute nodes per job (priorities).
+    cap_w:          [O] window token budget per storage target.
+    u_max:          utilization-score cap (adaptbf, DESIGN.md deviation 1).
+    integer_tokens: integerize allocations with remainder fairness.
+    alloc_backend:  "core" (vmap) | "pallas" (kernel) for adaptbf rounds.
+    control_code:   traced int32 scalar selecting the member of a
+                    ``CodedPolicy``; None under direct dispatch.
+    """
+
+    nodes: jnp.ndarray
+    cap_w: jnp.ndarray
+    u_max: float = 64.0
+    integer_tokens: bool = True
+    alloc_backend: str = "core"
+    control_code: Optional[jnp.ndarray] = None
+
+
+class WindowObs(NamedTuple):
+    """What one observation window revealed, per target per job ([O, J]).
+
+    served: RPCs served during the window.
+    demand: the allocator's demand signal d_x (served + standing queue).
+    alloc:  the allocation that was *applied* this window.
+    """
+
+    served: jnp.ndarray
+    demand: jnp.ndarray
+    alloc: jnp.ndarray
+
+
+class ControlPolicy:
+    """Base control discipline.  Subclass and register with
+    ``@register_policy(name)``; override ``init_alloc`` and ``step`` at
+    minimum.  All arrays are [O, J]; no method may mix rows."""
+
+    name: str = "?"
+
+    def init_state(self, ctx: PolicyContext) -> Any:
+        """Policy state carried across windows (any pytree; default none)."""
+        return ()
+
+    def init_alloc(self, ctx: PolicyContext) -> jnp.ndarray:
+        """Window-0 allocation, before any demand has been observed.
+        ``inf`` means "no rule" -- the job is served from the fallback
+        queue until the first real allocation lands."""
+        raise NotImplementedError
+
+    def gate(self, alloc: jnp.ndarray, ctx: PolicyContext) -> jnp.ndarray:
+        """Window-start token budget from the last allocation.  Default:
+        the allocation is the budget (0 = ruled shut, inf = unruled)."""
+        return alloc
+
+    def step(self, state: Any, obs: WindowObs,
+             ctx: PolicyContext) -> Tuple[Any, jnp.ndarray]:
+        """One control round: (state, obs) -> (new state, next allocation)."""
+        raise NotImplementedError
+
+    def record(self, state: Any, ctx: PolicyContext) -> jnp.ndarray:
+        """Reportable per-job [O, J] state for trajectory telemetry (the
+        lend/borrow record for adaptbf; zeros for stateless policies)."""
+        return jnp.zeros_like(ctx.nodes)
+
+
+# ----------------------------------------------------------------- registry
+
+
+POLICIES: Dict[str, ControlPolicy] = {}
+
+
+def register_policy(name: str, *, override: bool = False):
+    """Class decorator: register a ControlPolicy subclass under ``name``.
+    Duplicate names raise (a typo'd re-registration would silently swap a
+    builtin for every later run in the process); pass ``override=True`` to
+    replace deliberately."""
+    def deco(cls):
+        if name in POLICIES and not override:
+            raise ValueError(
+                f"control policy {name!r} is already registered "
+                f"(to {type(POLICIES[name]).__name__}); pass override=True "
+                "to replace it")
+        cls.name = name
+        POLICIES[name] = cls()
+        return cls
+    return deco
+
+
+def get_policy(name: str) -> ControlPolicy:
+    try:
+        return POLICIES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown control policy {name!r}; registered: {list_policies()}")
+
+
+def list_policies():
+    return sorted(POLICIES)
+
+
+def _unruled(ctx: PolicyContext) -> jnp.ndarray:
+    return jnp.full(ctx.nodes.shape, jnp.inf, jnp.float32)
+
+
+def _static_alloc(ctx: PolicyContext) -> jnp.ndarray:
+    """[O, J] static TBF rates: every target divides its own budget by the
+    *global* priority share (vmapped so fleet == N independent targets)."""
+    return jax.vmap(baselines.static_allocate)(ctx.nodes, ctx.cap_w)
+
+
+# ----------------------------------------------------------- built-in set
+
+
+@register_policy("adaptbf")
+class AdapTBFPolicy(ControlPolicy):
+    """The paper's decentralized adaptive token borrowing allocator."""
+
+    def init_state(self, ctx):
+        return init_fleet_state(*ctx.nodes.shape)
+
+    def init_alloc(self, ctx):
+        # window 0: no demand observed yet -> no rules exist -> fallback
+        return _unruled(ctx)
+
+    def gate(self, alloc, ctx):
+        # a zero allocation means the job's rule is *stopped* -> fallback
+        return jnp.where(alloc > 0, alloc, jnp.inf)
+
+    def step(self, state, obs, ctx):
+        if ctx.alloc_backend == "core":
+            return adaptbf.fleet_allocate(
+                state, obs.demand, ctx.nodes, ctx.cap_w,
+                u_max=ctx.u_max, integer_tokens=ctx.integer_tokens)
+        if ctx.alloc_backend == "pallas":
+            if not ctx.integer_tokens:
+                raise ValueError(
+                    'alloc_backend="pallas" supports integer tokens only; '
+                    'use the "core" backend for float-token budgets')
+            # imported lazily: the kernel path pulls in pallas machinery
+            # that the plain vmap backend never needs
+            from repro.kernels.adaptbf_alloc import ops
+            alloc, rec, rem = ops.fleet_alloc(
+                obs.demand, ctx.nodes, state.record, state.remainder,
+                state.alloc_prev, ctx.cap_w, u_max=ctx.u_max)
+            return AllocatorState(record=rec, remainder=rem,
+                                  alloc_prev=alloc), alloc
+        raise ValueError(f"unknown alloc_backend: {ctx.alloc_backend!r}")
+
+    def record(self, state, ctx):
+        return state.record
+
+
+@register_policy("static")
+class StaticPolicy(ControlPolicy):
+    """Static TBF: fixed rules sized by each job's share of the total
+    system, never stopped, never adapted (paper Section IV-C)."""
+
+    def init_state(self, ctx):
+        return ()
+
+    def init_alloc(self, ctx):
+        return _static_alloc(ctx)   # rules apply from t=0
+
+    def step(self, state, obs, ctx):
+        return state, _static_alloc(ctx)
+
+
+@register_policy("nobw")
+class NoBWPolicy(ControlPolicy):
+    """No bandwidth control at all: every job is unruled, the simulator
+    arbitrates by backlog share (Lustre default, FCFS over I/O threads)."""
+
+    def init_state(self, ctx):
+        return ()
+
+    def init_alloc(self, ctx):
+        return _unruled(ctx)
+
+    def step(self, state, obs, ctx):
+        return state, _unruled(ctx)
+
+
+@register_policy("static_wc")
+class StaticWorkConservingPolicy(ControlPolicy):
+    """Work-conserving static TBF: rates stay anchored to the static
+    priority shares, but each window's *unused* share is re-granted to
+    backlogged jobs -- weighted by the same static priority shares, so
+    contended spare still follows priority instead of queue depth.  No
+    lend/borrow records, no repayment -- the ablation between ``static``
+    and ``adaptbf`` that isolates work conservation from debt tracking."""
+
+    def init_alloc(self, ctx):
+        return _static_alloc(ctx)   # rules from t=0, like static
+
+    def gate(self, alloc, ctx):
+        # inactive jobs carry a zero allocation -> rule stopped -> fallback
+        return jnp.where(alloc > 0, alloc, jnp.inf)
+
+    def step(self, state, obs, ctx):
+        share = _static_alloc(ctx)
+        active = obs.demand > 0
+        base = jnp.where(active, jnp.minimum(share, obs.demand), 0.0)
+        spare = jnp.maximum(
+            ctx.cap_w[:, None] - jnp.sum(base, axis=-1, keepdims=True), 0.0)
+        needy = active & (obs.demand > share)
+        weight = jnp.where(needy, share, 0.0)
+        extra = spare * weight / jnp.maximum(
+            jnp.sum(weight, axis=-1, keepdims=True), _EPS)
+        alloc = jnp.where(active, base + extra, 0.0)
+        if ctx.integer_tokens:
+            alloc = jnp.floor(alloc)
+        return state, alloc
+
+
+@register_policy("aimd")
+class AIMDPolicy(ControlPolicy):
+    """Feedback throttler: the server installs priority-weighted rate rules
+    only while it is saturated (served ~ capacity) and removes them the
+    moment pressure clears, with the carried per-job rates evolving by
+    additive-increase / multiplicative-decrease -- in the spirit of
+    feedback-control throttling for shared-storage congestion
+    (arXiv:2511.16177).  Increase is weighted by priority share so the
+    AIMD fixed point respects job priorities; uncongested windows are
+    unruled, so the throttler is work-conserving by construction."""
+
+    ai_frac: float = 0.08     # additive increase per window, x cap_w x share
+    md: float = 0.7           # multiplicative decrease on saturation
+    sat: float = 0.95         # served/capacity ratio that signals congestion
+    floor: float = 1.0        # tokens/window a job can always keep
+
+    def init_state(self, ctx):
+        return _static_alloc(ctx)   # carried per-job rates, [O, J]
+
+    def init_alloc(self, ctx):
+        # like adaptbf: no rules until the first window has been observed
+        return _unruled(ctx)
+
+    def gate(self, alloc, ctx):
+        return jnp.where(alloc > 0, alloc, jnp.inf)
+
+    def step(self, rate, obs, ctx):
+        p = ctx.nodes / jnp.maximum(
+            jnp.sum(ctx.nodes, axis=-1, keepdims=True), _EPS)
+        served_tot = jnp.sum(obs.served, axis=-1, keepdims=True)
+        congested = served_tot >= self.sat * ctx.cap_w[:, None]
+        # decrease only the jobs whose own rule was *binding* (budget
+        # exhausted) during a congested window: a congested unruled window
+        # just installs rules at the current rates, and a ruled job that
+        # underused its budget did not cause the congestion -- cutting
+        # either would spiral rates toward the floor
+        gated = jnp.isfinite(obs.alloc) & (obs.alloc > 0)
+        binding = gated & (obs.served >= self.sat * obs.alloc)
+        rate = jnp.where(
+            congested & binding, rate * self.md,
+            jnp.where(congested, rate,
+                      rate + self.ai_frac * ctx.cap_w[:, None] * p))
+        rate = jnp.clip(rate, self.floor, ctx.cap_w[:, None])
+        throttled = jnp.where(obs.demand > 0, rate, 0.0)
+        if ctx.integer_tokens:
+            throttled = jnp.floor(throttled)
+        # rules exist only while the target is congested; otherwise every
+        # job rides the fallback queue at full disk speed
+        alloc = jnp.where(congested, throttled, jnp.inf)
+        return rate, alloc
+
+
+# ------------------------------------------------------- coded combinator
+
+
+def select_by_code(code: jnp.ndarray, values: Sequence[jnp.ndarray]):
+    """Element-wise select values[code] via a where-chain (traced code)."""
+    out = values[-1]
+    for i in range(len(values) - 2, -1, -1):
+        out = jnp.where(code == i, values[i], out)
+    return out
+
+
+def control_codes(policies: Sequence[str]) -> Dict[str, int]:
+    """Name -> code mapping for a coded-policy subset (code = index)."""
+    return {name: i for i, name in enumerate(policies)}
+
+
+class CodedPolicy(ControlPolicy):
+    """Generic traced-mode combinator over any registered policy subset.
+
+    Every member policy's round is computed each window and the result is
+    element-wise selected by the runtime ``ctx.control_code`` (the member's
+    index).  The combined state is the tuple of member states; only the
+    selected member's state advances.  This is what lets one compiled
+    program ``vmap`` over scenarios x policies (``benchmarks/fleet_sweep``).
+    """
+
+    name = "coded"
+
+    def __init__(self, policies: Sequence[str]):
+        self.names = tuple(policies)
+        if not self.names:
+            raise ValueError("coded dispatch needs >= 1 member policy")
+        self.members = tuple(get_policy(n) for n in self.names)
+
+    def init_state(self, ctx):
+        return tuple(m.init_state(ctx) for m in self.members)
+
+    def init_alloc(self, ctx):
+        return select_by_code(
+            ctx.control_code, [m.init_alloc(ctx) for m in self.members])
+
+    def gate(self, alloc, ctx):
+        return select_by_code(
+            ctx.control_code, [m.gate(alloc, ctx) for m in self.members])
+
+    def step(self, state, obs, ctx):
+        outs = [m.step(s, obs, ctx) for m, s in zip(self.members, state)]
+        new_state = []
+        for i, (nxt, old) in enumerate(zip((o[0] for o in outs), state)):
+            is_i = ctx.control_code == i
+            new_state.append(jax.tree.map(
+                lambda a, b, sel=is_i: jnp.where(sel, a, b), nxt, old))
+        alloc = select_by_code(ctx.control_code, [o[1] for o in outs])
+        return tuple(new_state), alloc
+
+    def record(self, state, ctx):
+        return select_by_code(
+            ctx.control_code,
+            [m.record(s, ctx) for m, s in zip(self.members, state)])

@@ -11,6 +11,10 @@ and only the window-summed service leaves the chip.  One grid step serves a
 decentralization property is preserved structurally: the tick math IS
 ``storage.simulator._serve_tick`` (shape-generic, imported here -- the
 backends cannot drift; asserted in ``tests/test_kernel_fleet_window.py``).
+Since the engine unification (DESIGN.md section 7) this is the serve path
+of BOTH entry points: ``simulate`` (O=1 view) and ``simulate_fleet`` under
+any registered control policy route through the same ``serve_window``
+dispatch, so kernel parity automatically covers every policy.
 
 VMEM footprint ~ (window_ticks + 10) x BLOCK_O x J f32 arrays: the rate
 trace block dominates; BLOCK_O=8 holds through J=8192 at the default

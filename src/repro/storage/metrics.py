@@ -1,12 +1,22 @@
-"""Performance/fairness metrics over simulator trajectories.
+"""Performance/fairness metrics over simulator results.
 
 Used by the fleet benchmark sweep (``benchmarks/fleet_sweep.py``) and the
 fleet test suite.  All functions take numpy-compatible arrays and return
-plain floats so reports serialize straight to JSON.
+plain floats (or small numpy arrays) so reports serialize straight to JSON.
+
+Two families:
+
+* post-hoc metrics over ``[W, J]`` / ``[W, O, J]`` trajectory arrays;
+* ``streaming_*`` counterparts that finalize a ``telemetry.StreamStats``
+  carry from a ``telemetry="streaming"`` run -- each is tested to agree
+  with its trajectory twin (``tests/test_streaming_telemetry.py``), so long
+  horizons never have to materialize trajectories just to be measured.
 """
 from __future__ import annotations
 
 import numpy as np
+
+from repro.storage import telemetry
 
 
 def jain_index(x) -> float:
@@ -77,3 +87,116 @@ def p99_queue(demand, served) -> float:
     a proxy for tail latency pressure."""
     lag = np.asarray(demand, np.float64) - np.asarray(served, np.float64)
     return float(np.percentile(lag.ravel(), 99))
+
+
+def utilization(result, cfg, capacity_per_tick=None):
+    """Per-window fraction of disk capacity actually used.
+
+    Single target: [n_windows].  Fleet: [n_windows, O] (pass the per-OST
+    ``capacity_per_tick`` array used in the run for heterogeneous fleets).
+    The single definition -- ``storage.simulator.utilization`` re-exports it.
+    """
+    served = np.asarray(result.served, np.float64)
+    if served.ndim == 3:  # fleet trajectory [W, O, J]
+        if capacity_per_tick is None:
+            capacity_per_tick = cfg.capacity_per_tick
+        cap_w = np.asarray(capacity_per_tick, np.float64) * cfg.window_ticks
+        return served.sum(axis=-1) / cap_w
+    return served.sum(axis=-1) / (cfg.capacity_per_tick * cfg.window_ticks)
+
+
+def job_slowdown(served_wj, capacity_per_window) -> np.ndarray:
+    """[J] per-job slowdown: windows-to-completion vs. the unthrottled ideal.
+
+    Completion is the last window in which the job received any service;
+    the ideal is the windows its total data would need at the full capacity
+    of the targets it actually touched (its stripe set), floored at one
+    window (the simulator's resolution).  1.0 = the job ran as if alone;
+    NaN = the job was never served.  served_wj: [W, J] or [W, O, J];
+    capacity_per_window: scalar or [O].
+    """
+    s = np.asarray(served_wj, np.float64)
+    if s.ndim == 3:
+        cap = np.broadcast_to(
+            np.asarray(capacity_per_window, np.float64), (s.shape[1],))
+        per_oj = s.sum(axis=0)                              # [O, J]
+        eff_cap = (cap[:, None] * (per_oj > 0)).sum(axis=0)  # stripe-set cap
+        s = s.sum(axis=1)                                   # [W, J]
+    else:
+        eff_cap = float(capacity_per_window)
+    total = s.sum(axis=0)
+    any_w = s > 0
+    last = np.where(any_w.any(axis=0),
+                    s.shape[0] - 1 - any_w[::-1].argmax(axis=0), -1)
+    ideal = total / np.maximum(eff_cap, 1e-12)
+    return np.where(total > 0, (last + 1) / np.maximum(ideal, 1.0), np.nan)
+
+
+# ------------------------------------------------- streaming counterparts
+#
+# Finalizers over a ``telemetry.StreamStats`` carry.  Stats arrays are
+# [O, J] from ``simulate_fleet`` and [J] from the single-target squeeze;
+# every function accepts both.
+
+
+def _ksum(stats, field):
+    """A compensated sum field + its Kahan residual, in float64."""
+    return (np.asarray(getattr(stats, field), np.float64)
+            + np.asarray(getattr(stats.comp, field), np.float64))
+
+
+def _per_job(stats):
+    """(served[J], demand[J], last_served[J], fleet: bool) from stats."""
+    served = _ksum(stats, "served_sum")
+    demand = _ksum(stats, "demand_sum")
+    last = np.asarray(stats.last_served)
+    if served.ndim == 2:
+        return served.sum(axis=0), demand.sum(axis=0), last.max(axis=0), True
+    return served, demand, last, False
+
+
+def streaming_aggregate_mb(stats) -> float:
+    """Total data moved (1 RPC = 1 MB); twin of ``aggregate_mb``."""
+    return float(_ksum(stats, "served_sum").sum())
+
+
+def streaming_fairness(stats, nodes) -> float:
+    """Twin of ``fairness`` over the whole horizon: Jain index of
+    priority-normalized total throughput, demand-based participation."""
+    served, demand, _, _ = _per_job(stats)
+    norm = priority_normalized_throughput(served, nodes)
+    return jain_index(norm[demand > 0])
+
+
+def streaming_mean_utilization(stats, busy_only: bool = True) -> float:
+    """Twin of ``mean_utilization`` (same busy-window semantics)."""
+    if busy_only and int(stats.busy_windows) > 0:
+        return float(_ksum(stats, "util_busy_sum")) / int(stats.busy_windows)
+    windows = max(int(stats.windows), 1)
+    return float(_ksum(stats, "util_sum").mean()) / windows
+
+
+def streaming_p99_queue(stats, q: float = 99.0) -> float:
+    """Twin of ``p99_queue`` from the log-spaced backlog histogram: returns
+    the upper edge of the bin holding the q-th percentile (within one bin
+    width, ~16%/bin at the default 128-bin resolution)."""
+    hist = _ksum(stats, "lag_hist")
+    total = hist.sum()
+    if total == 0:
+        return 0.0
+    b = int(np.searchsorted(hist.cumsum(), total * q / 100.0))
+    return telemetry.bin_upper_edge(min(b, hist.size - 1))
+
+
+def streaming_job_slowdown(stats, capacity_per_window) -> np.ndarray:
+    """Twin of ``job_slowdown`` from carry-resident statistics."""
+    served, _, last, fleet = _per_job(stats)
+    if fleet:
+        per_oj = _ksum(stats, "served_sum")
+        cap = np.broadcast_to(
+            np.asarray(capacity_per_window, np.float64), (per_oj.shape[0],))
+        eff_cap = (cap[:, None] * (per_oj > 0)).sum(axis=0)
+    else:
+        eff_cap = float(capacity_per_window)
+    ideal = served / np.maximum(eff_cap, 1e-12)
+    return np.where(served > 0, (last + 1) / np.maximum(ideal, 1.0), np.nan)

@@ -20,35 +20,44 @@ Model
     2. *unruled* jobs (no rule / rule stopped -> infinite budget) form the
        fallback queue: they are served opportunistically from whatever
        capacity phase 1 left idle.
-* control modes: ``adaptbf`` (rules = allocator output; zero-allocation jobs
-  have their rule stopped -> fallback), ``static`` (fixed rules for every job,
-  never stopped), ``nobw`` (no rules at all -> everything fallback, i.e.
-  backlog-proportional FCFS).
-* the demand signal d_x fed to the allocator is what the server can observe:
+* control disciplines are pluggable ``ControlPolicy`` objects resolved from
+  the registry in ``core/policies.py`` (``adaptbf``, ``static``, ``nobw``,
+  ``static_wc``, ``aimd``, ...): the policy decides the window-0 gating
+  (``init_alloc``), how an allocation becomes a token budget (``gate``), and
+  the next allocation from the window's observation (``step``).
+* the demand signal d_x fed to every policy is what the server can observe:
   RPCs served during the window plus the standing queue at window end.
   Counting the queue is essential for allocation-starved jobs -- their
   clients' in-flight caps throttle issuance to ~the service rate, so an
   issuance-only signal would report u_x ~= 1 and never trigger the Eq. 6
   deficit boost (DESIGN.md section 3).
 
-Two entry points share the tick/window machinery below:
+ONE window engine (``_run_windows``) drives both entry points:
 
-* ``simulate``       -- one storage target (the paper's testbed).
+* ``simulate``       -- one storage target (the paper's testbed): the O=1
+                        view of the fleet engine, outputs squeezed.
 * ``simulate_fleet`` -- ``n_ost`` targets with per-OST queues and (possibly
   heterogeneous) capacities; clients stripe their RPC streams across targets
-  (see ``storage/striping.py``).  Every OST runs the allocator independently
-  -- the per-OST service/allocation path is the *same* function ``vmap``-ed
+  (see ``storage/striping.py``).  Every OST runs its policy independently
+  -- the per-OST service/control path is the *same* function ``vmap``-ed
   over the OST axis, so the paper's decentralization claim is structural:
   a fleet run bitwise-matches independent single-OST runs on the same
   per-OST demand (tested in ``tests/test_fleet_sim.py``).
 
-Both are a ``lax.scan`` over windows -- jittable end to end.  The inner
+The engine is a ``lax.scan`` over windows -- jittable end to end.  The inner
 per-tick loop is either a ``lax.scan`` of small ops (``serve_backend="scan"``)
 or one fused whole-window kernel invocation per window
-(``serve_backend="fused"``, ``kernels/fleet_window``; fleet only).
-``simulate_fleet`` additionally takes a traced ``control_code`` path
-(``FLEET_CONTROL_CODES``) so a benchmark sweep can ``vmap`` one compiled
-program over scenarios x control modes (``benchmarks/fleet_sweep.py``).
+(``serve_backend="fused"``, ``kernels/fleet_window``).  ``control="coded"``
+routes through the generic ``CodedPolicy`` combinator so a benchmark sweep
+can ``vmap`` one compiled program over scenarios x policies
+(``benchmarks/fleet_sweep.py``).
+
+Telemetry is selectable (``telemetry="trajectory" | "streaming"``):
+trajectory mode materializes the full ``[n_windows, O, J]`` outputs the
+paper-figure harnesses consume; streaming mode reduces per-window metric
+accumulators *inside* the scan carry (``storage/telemetry.py``) so peak
+memory is independent of horizon length, and ``n_windows=`` can extend a
+periodic trace to horizons far longer than the materialized rate array.
 """
 from __future__ import annotations
 
@@ -58,32 +67,44 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import adaptbf, baselines
-from repro.core.state import AllocatorState, init_fleet_state, init_state
+from repro.core.policies import (
+    CodedPolicy,
+    ControlPolicy,
+    PolicyContext,
+    WindowObs,
+    control_codes,
+    get_policy,
+)
+from repro.storage import telemetry
+from repro.storage.telemetry import StreamStats
 
 _EPS = 1e-9
 
-FLEET_CONTROL_CODES = {"adaptbf": 0, "static": 1, "nobw": 2}
+#: Default coded-policy subset (order defines the traced codes); kept to the
+#: paper's three evaluation modes for compatibility with existing sweeps.
+DEFAULT_CODED_POLICIES = ("adaptbf", "static", "nobw")
+FLEET_CONTROL_CODES = control_codes(DEFAULT_CODED_POLICIES)
 
 
 class SimConfig(NamedTuple):
     capacity_per_tick: float = 20.0    # RPCs/tick the OST can serve (2000/s @10 ms)
     window_ticks: int = 10             # observation window length in ticks
     tick_seconds: float = 0.01
-    control: str = "adaptbf"           # adaptbf | static | nobw
+    control: str = "adaptbf"           # any registered policy name
     u_max: float = 64.0
     integer_tokens: bool = True
     max_backlog: float = 256.0         # default client in-flight cap per job
+    telemetry: str = "trajectory"      # trajectory | streaming
 
 
 class FleetConfig(NamedTuple):
     """Static configuration for ``simulate_fleet`` (hashable -> one
-    compilation per (shape, control, backend) combination)."""
+    compilation per (shape, control, backend, telemetry) combination)."""
 
     capacity_per_tick: float = 20.0    # default per-OST capacity (RPCs/tick)
     window_ticks: int = 10
     tick_seconds: float = 0.01
-    control: str = "adaptbf"           # adaptbf | static | nobw | coded
+    control: str = "adaptbf"           # any registered policy name | coded
     u_max: float = 64.0
     integer_tokens: bool = True
     max_backlog: float = 256.0
@@ -91,6 +112,9 @@ class FleetConfig(NamedTuple):
     serve_backend: str = "scan"        # scan (per-tick lax.scan) | fused
                                        #   (whole-window kernel, one
                                        #   invocation per window)
+    telemetry: str = "trajectory"      # trajectory | streaming
+    coded_policies: tuple = DEFAULT_CODED_POLICIES
+                                       # member subset for control="coded"
 
 
 class SimResult(NamedTuple):
@@ -98,7 +122,7 @@ class SimResult(NamedTuple):
     demand: jnp.ndarray        # [n_windows, J] observed demand d_x per window
                                #   (RPCs served + standing queue at window end)
     alloc: jnp.ndarray         # [n_windows, J] token budget applied that window
-    record: jnp.ndarray        # [n_windows, J] lend/borrow record after window
+    record: jnp.ndarray        # [n_windows, J] policy record after window
     queue_final: jnp.ndarray   # [J]
     window_seconds: float
 
@@ -131,8 +155,15 @@ class FleetResult(NamedTuple):
         )
 
 
-def _window_capacity(cfg) -> float:
-    return cfg.capacity_per_tick * cfg.window_ticks
+class StreamResult(NamedTuple):
+    """Result of a ``telemetry="streaming"`` run: carry-resident sufficient
+    statistics instead of ``[n_windows, ...]`` trajectories.  Stats arrays
+    are [O, J] from ``simulate_fleet`` and [J] from ``simulate``; feed them
+    to the ``streaming_*`` finalizers in ``storage/metrics.py``."""
+
+    stats: StreamStats
+    queue_final: jnp.ndarray   # [O, J] (fleet) or [J] (single target)
+    window_seconds: float
 
 
 # --------------------------------------------------------- shared machinery
@@ -172,188 +203,46 @@ def _serve_tick(queue, vol_left, budget, rate_t, backlog_cap, capacity):
     return queue, vol_left, budget, served, issued
 
 
-def _gate_budget(control: str, alloc):
-    """Window-start token budget from the last allocation.  Under adaptbf a
-    zero allocation means the job's rule is *stopped* -> fallback queue."""
-    if control == "adaptbf":
-        return jnp.where(alloc > 0, alloc, jnp.inf)
-    return alloc
+# ------------------------------------------------------- the window engine
 
 
-# ------------------------------------------------------------ single target
+def _run_windows(cfg: FleetConfig, policy: ControlPolicy, nodes, rates,
+                 volume, cap_tick, backlog_cap, control_code,
+                 n_windows: Optional[int]):
+    """The single window loop behind both entry points.
 
+    nodes/volume/backlog_cap: [O, J]; rates: [T, O, J]; cap_tick: [O].
+    ``n_windows`` extends (or trims) the horizon by indexing the trace
+    periodically; None runs exactly the windows the trace covers.
 
-@functools.partial(jax.jit, static_argnames=("cfg",))
-def simulate(
-    cfg: SimConfig,
-    nodes: jnp.ndarray,
-    issue_rate: jnp.ndarray,
-    volume: jnp.ndarray,
-    max_backlog: Optional[jnp.ndarray] = None,
-) -> SimResult:
-    """Simulate one storage target.
-
-    Args:
-      cfg: SimConfig (static arg -> one compilation per control mode).
-      nodes: [J] compute nodes per job (priorities derive from these).
-      issue_rate: [T, J] client issue attempts (RPCs per tick).
-      volume: [J] total RPCs each job will ever issue (inf = unbounded).
-      max_backlog: optional [J] per-job client in-flight cap (defaults to
-        cfg.max_backlog for every job).
+    Returns ``(queue_final, outs)`` where ``outs`` is the per-window
+    (served, demand, alloc, record) stack in trajectory mode or the final
+    ``StreamStats`` in streaming mode.
     """
-    t_total, n_jobs = issue_rate.shape
-    n_windows = t_total // cfg.window_ticks
-    rates = issue_rate[: n_windows * cfg.window_ticks].reshape(
-        n_windows, cfg.window_ticks, n_jobs
-    )
-    cap_w = _window_capacity(cfg)
-    nodes = jnp.asarray(nodes, jnp.float32)
-    if max_backlog is None:
-        backlog_cap = jnp.full((n_jobs,), cfg.max_backlog, jnp.float32)
-    else:
-        backlog_cap = jnp.asarray(max_backlog, jnp.float32)
-
-    static_alloc = baselines.static_allocate(nodes, cap_w)
-    unruled = jnp.full((n_jobs,), jnp.inf, jnp.float32)
-
-    def tick_fn(carry, rate_t):
-        queue, vol_left, budget = carry
-        queue, vol_left, budget, served, _ = _serve_tick(
-            queue, vol_left, budget, rate_t, backlog_cap,
-            cfg.capacity_per_tick)
-        return (queue, vol_left, budget), served
-
-    def window_fn(carry, rates_w):
-        queue, vol_left, astate, alloc = carry
-        budget0 = _gate_budget(cfg.control, alloc)
-        (queue, vol_left, _), served_t = jax.lax.scan(
-            tick_fn, (queue, vol_left, budget0), rates_w
-        )
-        served_w = served_t.sum(axis=0)
-        demand = served_w + queue
-        if cfg.control == "adaptbf":
-            astate, alloc_next = adaptbf.allocate(
-                astate, demand, nodes, cap_w,
-                u_max=cfg.u_max, integer_tokens=cfg.integer_tokens,
-            )
-        elif cfg.control == "static":
-            alloc_next = static_alloc
-        else:  # nobw
-            alloc_next = unruled
-        out = (served_w, demand, alloc, astate.record)
-        return (queue, vol_left, astate, alloc_next), out
-
-    astate0 = init_state(n_jobs)
-    # window 0: no rules exist yet -> everything is fallback for adaptbf/nobw;
-    # static rules apply from t=0.
-    alloc0 = static_alloc if cfg.control == "static" else unruled
-    carry0 = (
-        jnp.zeros(n_jobs, jnp.float32),
-        jnp.asarray(volume, jnp.float32),
-        astate0,
-        alloc0,
-    )
-    (queue, _, _, _), (served, demand, alloc, record) = jax.lax.scan(
-        window_fn, carry0, rates
-    )
-    return SimResult(
-        served=served,
-        demand=demand,
-        alloc=alloc,
-        record=record,
-        queue_final=queue,
-        window_seconds=cfg.window_ticks * cfg.tick_seconds,
-    )
-
-
-# -------------------------------------------------------------------- fleet
-
-
-def _fleet_allocate(cfg: FleetConfig, astate, demand, nodes, cap_w):
-    """One decentralized allocation round for every OST, via the selected
-    backend.  demand/nodes: [O, J]; cap_w: [O]."""
-    if cfg.alloc_backend == "core":
-        return adaptbf.fleet_allocate(
-            astate, demand, nodes, cap_w,
-            u_max=cfg.u_max, integer_tokens=cfg.integer_tokens)
-    if cfg.alloc_backend == "pallas":
-        if not cfg.integer_tokens:
-            raise ValueError(
-                'alloc_backend="pallas" supports integer tokens only; use '
-                'the "core" backend for float-token (continuous) budgets')
-        # imported lazily: the kernel path pulls in pallas machinery that the
-        # plain vmap backend never needs
-        from repro.kernels.adaptbf_alloc import ops
-        alloc, rec, rem = ops.fleet_alloc(
-            demand, nodes, astate.record, astate.remainder,
-            astate.alloc_prev, cap_w, u_max=cfg.u_max)
-        return AllocatorState(record=rec, remainder=rem, alloc_prev=alloc), alloc
-    raise ValueError(f"unknown alloc_backend: {cfg.alloc_backend!r}")
-
-
-@functools.partial(jax.jit, static_argnames=("cfg",))
-def simulate_fleet(
-    cfg: FleetConfig,
-    nodes: jnp.ndarray,
-    issue_rate: jnp.ndarray,
-    volume: jnp.ndarray,
-    capacity_per_tick: Optional[jnp.ndarray] = None,
-    max_backlog: Optional[jnp.ndarray] = None,
-    control_code: Optional[jnp.ndarray] = None,
-) -> FleetResult:
-    """Simulate ``n_ost`` storage targets with striped client demand.
-
-    Args:
-      cfg: FleetConfig (static).  ``cfg.control`` picks the mode unless it is
-        ``"coded"`` (see ``control_code``).
-      nodes: [J] or [O, J] compute nodes per job.
-      issue_rate: [T, O, J] per-target client issue attempts (RPCs/tick) --
-        the output of a striping policy (``storage.striping``) or raw
-        per-OST traces.
-      volume: [O, J] total RPCs per job per target (inf = unbounded).
-      capacity_per_tick: optional [O] heterogeneous per-OST service rates
-        (defaults to cfg.capacity_per_tick everywhere).
-      max_backlog: optional [O, J] per-target client in-flight caps.
-      control_code: traced scalar int32 selecting the control mode at runtime
-        (``FLEET_CONTROL_CODES``); requires ``cfg.control == "coded"``.  This
-        is what lets one compiled program sweep scenarios x modes under vmap.
-
-    Returns:
-      FleetResult with [n_windows, O, J] trajectories.
-    """
-    t_total, n_ost, n_jobs = issue_rate.shape
-    n_windows = t_total // cfg.window_ticks
-    rates = issue_rate[: n_windows * cfg.window_ticks].reshape(
-        n_windows, cfg.window_ticks, n_ost, n_jobs
-    )
-    coded = cfg.control == "coded"
-    if coded and control_code is None:
-        raise ValueError('cfg.control == "coded" requires control_code')
-    if not coded and control_code is not None:
-        raise ValueError('control_code requires cfg.control == "coded"')
-
-    nodes = jnp.asarray(nodes, jnp.float32)
-    if nodes.ndim == 1:
-        nodes = jnp.broadcast_to(nodes, (n_ost, n_jobs))
-    if capacity_per_tick is None:
-        cap_tick = jnp.full((n_ost,), cfg.capacity_per_tick, jnp.float32)
-    else:
-        cap_tick = jnp.asarray(capacity_per_tick, jnp.float32)
+    t_total, n_ost, n_jobs = rates.shape
+    trace_windows = t_total // cfg.window_ticks
+    if trace_windows == 0:
+        raise ValueError(
+            f"trace covers {t_total} ticks < one {cfg.window_ticks}-tick window")
+    if n_windows is None:
+        n_windows = trace_windows
+    tiled = n_windows != trace_windows
+    trace = rates[: trace_windows * cfg.window_ticks].reshape(
+        trace_windows, cfg.window_ticks, n_ost, n_jobs)
     cap_w = cap_tick * cfg.window_ticks
-    if max_backlog is None:
-        backlog_cap = jnp.full((n_ost, n_jobs), cfg.max_backlog, jnp.float32)
-    else:
-        backlog_cap = jnp.asarray(max_backlog, jnp.float32)
-
-    static_alloc = jax.vmap(baselines.static_allocate)(nodes, cap_w)
-    unruled = jnp.full((n_ost, n_jobs), jnp.inf, jnp.float32)
+    ctx = PolicyContext(
+        nodes=nodes, cap_w=cap_w, u_max=cfg.u_max,
+        integer_tokens=cfg.integer_tokens, alloc_backend=cfg.alloc_backend,
+        control_code=control_code)
+    if cfg.telemetry not in ("trajectory", "streaming"):
+        raise ValueError(f"unknown telemetry mode: {cfg.telemetry!r}")
+    streaming = cfg.telemetry == "streaming"
     serve_tick = jax.vmap(_serve_tick)
-    cap_tick_col = cap_tick  # [O], one scalar per vmapped row
 
     def tick_fn(carry, rate_t):
         queue, vol_left, budget = carry
         queue, vol_left, budget, served, _ = serve_tick(
-            queue, vol_left, budget, rate_t, backlog_cap, cap_tick_col)
+            queue, vol_left, budget, rate_t, backlog_cap, cap_tick)
         return (queue, vol_left, budget), served
 
     def serve_window(queue, vol_left, budget0, rates_w):
@@ -371,79 +260,173 @@ def simulate_fleet(
             return queue, vol_left, served_t.sum(axis=0)
         raise ValueError(f"unknown serve_backend: {cfg.serve_backend!r}")
 
-    def next_alloc(astate, demand):
-        """Control-mode dispatch.  Static modes resolve at trace time; the
-        coded path computes the adaptbf round and selects elementwise so the
-        mode can be a vmapped runtime value."""
-        if cfg.control == "adaptbf":
-            return _fleet_allocate(cfg, astate, demand, nodes, cap_w)
-        if cfg.control == "static":
-            return astate, static_alloc
-        if cfg.control == "nobw":
-            return astate, unruled
-        # coded: 0 = adaptbf, 1 = static, 2 = nobw
-        astate_ad, alloc_ad = _fleet_allocate(cfg, astate, demand, nodes, cap_w)
-        is_ad = control_code == FLEET_CONTROL_CODES["adaptbf"]
-        astate_next = jax.tree.map(
-            lambda a, b: jnp.where(is_ad, a, b), astate_ad, astate)
-        alloc_next = jnp.where(
-            is_ad, alloc_ad,
-            jnp.where(control_code == FLEET_CONTROL_CODES["static"],
-                      static_alloc, unruled))
-        return astate_next, alloc_next
-
-    def gate(alloc):
-        if coded:
-            is_ad = control_code == FLEET_CONTROL_CODES["adaptbf"]
-            return jnp.where(is_ad, jnp.where(alloc > 0, alloc, jnp.inf), alloc)
-        return _gate_budget(cfg.control, alloc)
-
     def window_fn(carry, rates_w):
-        queue, vol_left, astate, alloc = carry
-        budget0 = gate(alloc)
+        w, queue, vol_left, pstate, alloc, stats = carry
+        if tiled:
+            rates_w = jax.lax.dynamic_index_in_dim(
+                trace, jnp.mod(w, trace_windows), keepdims=False)
+        budget0 = policy.gate(alloc, ctx)
         queue, vol_left, served_w = serve_window(
             queue, vol_left, budget0, rates_w)
         demand = served_w + queue
-        astate, alloc_next = next_alloc(astate, demand)
-        out = (served_w, demand, alloc, astate.record)
-        return (queue, vol_left, astate, alloc_next), out
+        pstate, alloc_next = policy.step(
+            pstate, WindowObs(served=served_w, demand=demand, alloc=alloc),
+            ctx)
+        if streaming:
+            stats = telemetry.update_stats(stats, served_w, demand, alloc,
+                                           cap_w)
+            out = None
+        else:
+            out = (served_w, demand, alloc, policy.record(pstate, ctx))
+        return (w + 1, queue, vol_left, pstate, alloc_next, stats), out
 
-    astate0 = init_fleet_state(n_ost, n_jobs)
-    if cfg.control == "static":
-        alloc0 = static_alloc
-    elif coded:
-        alloc0 = jnp.where(control_code == FLEET_CONTROL_CODES["static"],
-                           static_alloc, unruled)
-    else:
-        alloc0 = unruled
     carry0 = (
+        jnp.int32(0),
         jnp.zeros((n_ost, n_jobs), jnp.float32),
         jnp.asarray(volume, jnp.float32),
-        astate0,
-        alloc0,
+        policy.init_state(ctx),
+        policy.init_alloc(ctx),
+        telemetry.init_stats(n_ost, n_jobs) if streaming else (),
     )
-    (queue, _, _, _), (served, demand, alloc, record) = jax.lax.scan(
-        window_fn, carry0, rates
-    )
-    return FleetResult(
-        served=served,
-        demand=demand,
-        alloc=alloc,
-        record=record,
-        queue_final=queue,
-        window_seconds=cfg.window_ticks * cfg.tick_seconds,
-    )
+    xs = None if tiled else trace
+    (_, queue, _, _, _, stats), outs = jax.lax.scan(
+        window_fn, carry0, xs, length=n_windows)
+    return queue, (stats if streaming else outs)
+
+
+def _resolve_policy(cfg, control_code) -> ControlPolicy:
+    coded = cfg.control == "coded"
+    if coded and control_code is None:
+        raise ValueError('cfg.control == "coded" requires control_code')
+    if not coded and control_code is not None:
+        raise ValueError('control_code requires cfg.control == "coded"')
+    if coded:
+        return CodedPolicy(cfg.coded_policies)
+    return get_policy(cfg.control)
+
+
+# ------------------------------------------------------------ single target
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "n_windows"))
+def simulate(
+    cfg: SimConfig,
+    nodes: jnp.ndarray,
+    issue_rate: jnp.ndarray,
+    volume: jnp.ndarray,
+    max_backlog: Optional[jnp.ndarray] = None,
+    n_windows: Optional[int] = None,
+) -> SimResult:
+    """Simulate one storage target: the O=1 view of the fleet engine.
+
+    Args:
+      cfg: SimConfig (static arg -> one compilation per control mode).
+      nodes: [J] compute nodes per job (priorities derive from these).
+      issue_rate: [T, J] client issue attempts (RPCs per tick).
+      volume: [J] total RPCs each job will ever issue (inf = unbounded).
+      max_backlog: optional [J] per-job client in-flight cap (defaults to
+        cfg.max_backlog for every job).
+      n_windows: optional horizon override; the rate trace is indexed
+        periodically beyond its own length (pair with streaming telemetry).
+    """
+    _t, n_jobs = issue_rate.shape
+    # SimConfig's field names are a strict subset of FleetConfig's, so the
+    # O=1 lift cannot silently drop a future shared knob
+    fcfg = FleetConfig(**cfg._asdict())
+    policy = _resolve_policy(fcfg, None)
+    nodes = jnp.asarray(nodes, jnp.float32).reshape(1, n_jobs)
+    rates = jnp.asarray(issue_rate, jnp.float32)[:, None, :]
+    volume = jnp.asarray(volume, jnp.float32).reshape(1, n_jobs)
+    cap_tick = jnp.full((1,), cfg.capacity_per_tick, jnp.float32)
+    if max_backlog is None:
+        backlog_cap = jnp.full((1, n_jobs), cfg.max_backlog, jnp.float32)
+    else:
+        backlog_cap = jnp.asarray(max_backlog, jnp.float32).reshape(1, n_jobs)
+
+    queue, outs = _run_windows(fcfg, policy, nodes, rates, volume, cap_tick,
+                               backlog_cap, None, n_windows)
+    window_seconds = cfg.window_ticks * cfg.tick_seconds
+    if cfg.telemetry == "streaming":
+        return StreamResult(stats=telemetry.squeeze_stats(outs),
+                            queue_final=queue[0],
+                            window_seconds=window_seconds)
+    served, demand, alloc, record = (x[:, 0] for x in outs)
+    return SimResult(served=served, demand=demand, alloc=alloc,
+                     record=record, queue_final=queue[0],
+                     window_seconds=window_seconds)
+
+
+# -------------------------------------------------------------------- fleet
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "n_windows"))
+def simulate_fleet(
+    cfg: FleetConfig,
+    nodes: jnp.ndarray,
+    issue_rate: jnp.ndarray,
+    volume: jnp.ndarray,
+    capacity_per_tick: Optional[jnp.ndarray] = None,
+    max_backlog: Optional[jnp.ndarray] = None,
+    control_code: Optional[jnp.ndarray] = None,
+    n_windows: Optional[int] = None,
+) -> FleetResult:
+    """Simulate ``n_ost`` storage targets with striped client demand.
+
+    Args:
+      cfg: FleetConfig (static).  ``cfg.control`` names a registered policy,
+        or ``"coded"`` (see ``control_code``).
+      nodes: [J] or [O, J] compute nodes per job.
+      issue_rate: [T, O, J] per-target client issue attempts (RPCs/tick) --
+        the output of a striping policy (``storage.striping``) or raw
+        per-OST traces.
+      volume: [O, J] total RPCs per job per target (inf = unbounded).
+      capacity_per_tick: optional [O] heterogeneous per-OST service rates
+        (defaults to cfg.capacity_per_tick everywhere).
+      max_backlog: optional [O, J] per-target client in-flight caps.
+      control_code: traced scalar int32 selecting the policy at runtime from
+        ``cfg.coded_policies`` (default codes: ``FLEET_CONTROL_CODES``);
+        requires ``cfg.control == "coded"``.  This is what lets one compiled
+        program sweep scenarios x policies under vmap.
+      n_windows: optional horizon override; the rate trace is indexed
+        periodically beyond its own length (pair with streaming telemetry).
+
+    Returns:
+      FleetResult with [n_windows, O, J] trajectories, or StreamResult when
+      ``cfg.telemetry == "streaming"``.
+    """
+    _t, n_ost, n_jobs = issue_rate.shape
+    policy = _resolve_policy(cfg, control_code)
+    nodes = jnp.asarray(nodes, jnp.float32)
+    if nodes.ndim == 1:
+        nodes = jnp.broadcast_to(nodes, (n_ost, n_jobs))
+    if capacity_per_tick is None:
+        cap_tick = jnp.full((n_ost,), cfg.capacity_per_tick, jnp.float32)
+    else:
+        cap_tick = jnp.asarray(capacity_per_tick, jnp.float32)
+    if max_backlog is None:
+        backlog_cap = jnp.full((n_ost, n_jobs), cfg.max_backlog, jnp.float32)
+    else:
+        backlog_cap = jnp.asarray(max_backlog, jnp.float32)
+
+    queue, outs = _run_windows(
+        cfg, policy, nodes, jnp.asarray(issue_rate, jnp.float32), volume,
+        cap_tick, backlog_cap, control_code, n_windows)
+    window_seconds = cfg.window_ticks * cfg.tick_seconds
+    if cfg.telemetry == "streaming":
+        return StreamResult(stats=outs, queue_final=queue,
+                            window_seconds=window_seconds)
+    served, demand, alloc, record = outs
+    return FleetResult(served=served, demand=demand, alloc=alloc,
+                       record=record, queue_final=queue,
+                       window_seconds=window_seconds)
 
 
 def utilization(result, cfg, capacity_per_tick=None):
     """Per-window fraction of disk capacity actually used.
 
-    Single target: [n_windows].  Fleet: [n_windows, O] (pass the per-OST
-    ``capacity_per_tick`` array used in the run for heterogeneous fleets).
+    Thin re-export kept for compatibility -- the single definition lives in
+    ``storage/metrics.py``.
     """
-    if isinstance(result, FleetResult):
-        if capacity_per_tick is None:
-            capacity_per_tick = cfg.capacity_per_tick
-        cap_w = jnp.asarray(capacity_per_tick) * cfg.window_ticks
-        return result.served.sum(axis=-1) / cap_w
-    return result.served.sum(axis=-1) / _window_capacity(cfg)
+    from repro.storage import metrics
+    return metrics.utilization(result, cfg,
+                               capacity_per_tick=capacity_per_tick)

@@ -1,0 +1,47 @@
+"""Pre-refactor golden regression: the unified window engine must reproduce,
+bit for bit, the trajectories the PR-2 dual-simulator implementation emitted
+(captured to ``tests/data/*.npz`` immediately before the engine collapse).
+Guards the ``simulate``-as-O=1-view rewrite and every future engine change.
+"""
+import pathlib
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.storage import FleetConfig, SimConfig, get_scenario, simulate, simulate_fleet
+
+DATA = pathlib.Path(__file__).parent / "data"
+FIELDS = ("served", "demand", "alloc", "record", "queue_final")
+
+
+@pytest.mark.parametrize("control", ["adaptbf", "static", "nobw"])
+@pytest.mark.parametrize(
+    "name", ["allocation_ivd", "redistribution_ive", "recompensation_ivf"])
+def test_single_target_bitwise_matches_prerefactor_golden(name, control):
+    golden = np.load(DATA / "golden_single_target.npz")
+    scn = get_scenario(name, duration_s=6.0)   # capture used duration_s=6.0
+    res = simulate(SimConfig(control=control), jnp.asarray(scn.nodes),
+                   jnp.asarray(scn.issue_rate), jnp.asarray(scn.volume),
+                   jnp.asarray(scn.max_backlog))
+    for field in FIELDS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(res, field)),
+            golden[f"{name}/{control}/{field}"],
+            err_msg=f"{name}/{control}/{field}")
+
+
+@pytest.mark.parametrize("control", ["adaptbf", "static", "nobw"])
+@pytest.mark.parametrize("name", ["fleet_noisy_neighbor", "fleet_churn"])
+def test_fleet_bitwise_matches_prerefactor_golden(name, control):
+    golden = np.load(DATA / "golden_fleet.npz")
+    scn = get_scenario(name, duration_s=5.0)   # capture used duration_s=5.0
+    res = simulate_fleet(
+        FleetConfig(control=control), jnp.asarray(scn.nodes),
+        jnp.asarray(scn.issue_rate), jnp.asarray(scn.volume),
+        jnp.asarray(scn.capacity_per_tick), jnp.asarray(scn.max_backlog))
+    for field in FIELDS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(res, field)),
+            golden[f"{name}/{control}/{field}"],
+            err_msg=f"{name}/{control}/{field}")

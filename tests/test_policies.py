@@ -1,0 +1,244 @@
+"""Control-policy registry + unified-engine tests: registry resolution,
+the cold-start (window 0) contract of ``ControlPolicy.init_alloc`` under the
+coded combinator, custom-policy registration through the public API, and the
+qualitative behavior of the two new disciplines (``static_wc``, ``aimd``)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ControlPolicy, get_policy, list_policies, register_policy
+from repro.core.policies import CodedPolicy
+from repro.storage import (
+    FleetConfig,
+    SimConfig,
+    get_scenario,
+    simulate,
+    simulate_fleet,
+)
+
+ALL_BUILTINS = ("adaptbf", "static", "nobw", "static_wc", "aimd")
+
+
+def run_fleet(scn, control, **kw):
+    cfg = FleetConfig(control=control, **kw)
+    res = simulate_fleet(
+        cfg, jnp.asarray(scn.nodes), jnp.asarray(scn.issue_rate),
+        jnp.asarray(scn.volume), jnp.asarray(scn.capacity_per_tick),
+        jnp.asarray(scn.max_backlog))
+    return cfg, res
+
+
+# ----------------------------------------------------------------- registry
+
+
+def test_registry_resolves_at_least_five_policies():
+    assert set(list_policies()) >= set(ALL_BUILTINS)
+    for name in ALL_BUILTINS:
+        assert get_policy(name).name == name
+
+
+def test_unknown_policy_rejected_with_listing():
+    with pytest.raises(ValueError, match="adaptbf"):
+        get_policy("warp_speed")
+    with pytest.raises(ValueError, match="control policy"):
+        simulate(SimConfig(control="warp_speed"), jnp.ones(4),
+                 jnp.ones((20, 4)), jnp.full(4, jnp.inf))
+
+
+def test_coded_accepts_single_member():
+    """A one-policy coded subset must work (the sweep's --policies filter
+    can legitimately select a single discipline)."""
+    scn = get_scenario("fleet_churn", duration_s=3.0)
+    _, want = run_fleet(scn, "static")
+    cfg = FleetConfig(control="coded", coded_policies=("static",))
+    got = simulate_fleet(
+        cfg, jnp.asarray(scn.nodes), jnp.asarray(scn.issue_rate),
+        jnp.asarray(scn.volume), jnp.asarray(scn.capacity_per_tick),
+        jnp.asarray(scn.max_backlog), control_code=jnp.int32(0))
+    np.testing.assert_array_equal(np.asarray(got.served),
+                                  np.asarray(want.served))
+    with pytest.raises(ValueError, match=">= 1"):
+        CodedPolicy(())
+
+
+def test_duplicate_registration_rejected_without_override():
+    with pytest.raises(ValueError, match="already registered"):
+        @register_policy("static")
+        class Impostor(ControlPolicy):
+            pass
+    # the builtin survived the attempt
+    assert get_policy("static").name == "static"
+
+
+@pytest.mark.parametrize("control", ALL_BUILTINS)
+def test_every_policy_conserves_capacity(control):
+    """Every registered discipline obeys the physical invariant: no OST
+    serves beyond its own capacity in any window."""
+    scn = get_scenario("fleet_ost_imbalance", duration_s=6.0)
+    cfg, res = run_fleet(scn, control)
+    per_window_ost = np.asarray(res.served).sum(axis=-1)     # [W, O]
+    cap_w = scn.capacity_per_tick * cfg.window_ticks
+    assert (per_window_ost <= cap_w[None, :] + 1e-3).all()
+    assert (np.asarray(res.served) >= -1e-6).all()
+    assert np.asarray(res.served).sum() > 0
+
+
+# ------------------------------------------------ cold start / coded window 0
+
+
+def test_coded_window0_bitwise_matches_each_direct_mode():
+    """The window-0 gating now lives in ``ControlPolicy.init_alloc`` alone;
+    the coded combinator must reproduce each member's cold start (and whole
+    trajectory) bit-for-bit -- for every registered builtin, not just the
+    paper trio."""
+    scn = get_scenario("fleet_churn", duration_s=4.0)
+    cfg = FleetConfig(control="coded", coded_policies=ALL_BUILTINS)
+    for code, mode in enumerate(ALL_BUILTINS):
+        _, want = run_fleet(scn, mode)
+        got = simulate_fleet(
+            cfg, jnp.asarray(scn.nodes), jnp.asarray(scn.issue_rate),
+            jnp.asarray(scn.volume), jnp.asarray(scn.capacity_per_tick),
+            jnp.asarray(scn.max_backlog), control_code=jnp.int32(code))
+        np.testing.assert_array_equal(
+            np.asarray(got.alloc)[0], np.asarray(want.alloc)[0],
+            err_msg=f"{mode}: window-0 alloc (init_alloc cold start)")
+        for field in ("served", "demand", "alloc", "record"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(got, field)),
+                np.asarray(getattr(want, field)), err_msg=mode)
+
+
+def test_single_target_is_the_o1_view_of_the_fleet_engine():
+    """One engine: ``simulate`` on a trace must bitwise-equal the O=1 fleet
+    run on the same demand, for every registered policy."""
+    rng = np.random.default_rng(3)
+    t, j = 300, 5
+    rates = (rng.integers(0, 30, (t, j))
+             * (rng.random((t, j)) < 0.6)).astype(np.float32)
+    volume = np.where(rng.random(j) < 0.5, np.inf, 2000.0).astype(np.float32)
+    backlog = rng.integers(32, 256, (j,)).astype(np.float32)
+    nodes = rng.integers(1, 64, (j,)).astype(np.float32)
+    for control in ALL_BUILTINS:
+        sres = simulate(SimConfig(control=control), jnp.asarray(nodes),
+                        jnp.asarray(rates), jnp.asarray(volume),
+                        jnp.asarray(backlog))
+        fres = simulate_fleet(
+            FleetConfig(control=control), jnp.asarray(nodes),
+            jnp.asarray(rates[:, None, :]), jnp.asarray(volume[None]),
+            jnp.full((1,), 20.0), jnp.asarray(backlog[None]))
+        for field in ("served", "demand", "alloc", "record", "queue_final"):
+            a = np.asarray(getattr(sres, field))
+            b = np.asarray(getattr(fres.per_ost(0), field))
+            np.testing.assert_array_equal(a, b, err_msg=f"{control}/{field}")
+
+
+# ------------------------------------------------------- custom registration
+
+
+@register_policy("_test_equal_split")
+class _EqualSplit(ControlPolicy):
+    """The README's ~10-line custom policy: every active job gets an equal
+    slice of the window budget."""
+
+    def init_alloc(self, ctx):
+        return jnp.full(ctx.nodes.shape, jnp.inf)  # fallback until observed
+
+    def gate(self, alloc, ctx):
+        return jnp.where(alloc > 0, alloc, jnp.inf)
+
+    def step(self, state, obs, ctx):
+        active = obs.demand > 0
+        n = jnp.maximum(active.sum(axis=-1, keepdims=True), 1)
+        return state, jnp.where(active, ctx.cap_w[:, None] / n, 0.0)
+
+
+def test_custom_policy_runs_through_both_entry_points():
+    scn = get_scenario("redistribution_ive", duration_s=5.0)
+    cfg = SimConfig(control="_test_equal_split")
+    res = simulate(cfg, jnp.asarray(scn.nodes), jnp.asarray(scn.issue_rate),
+                   jnp.asarray(scn.volume), jnp.asarray(scn.max_backlog))
+    served = np.asarray(res.served)
+    assert served.sum() > 0
+    assert (served.sum(axis=-1)
+            <= cfg.capacity_per_tick * cfg.window_ticks + 1e-3).all()
+    fscn = get_scenario("fleet_churn", duration_s=4.0)
+    _, fres = run_fleet(fscn, "_test_equal_split")
+    assert np.asarray(fres.served).sum() > 0
+    # a custom policy joins the coded sweep combinator like any builtin
+    cfg = FleetConfig(control="coded",
+                      coded_policies=("_test_equal_split", "nobw"))
+    coded = simulate_fleet(
+        cfg, jnp.asarray(fscn.nodes), jnp.asarray(fscn.issue_rate),
+        jnp.asarray(fscn.volume), jnp.asarray(fscn.capacity_per_tick),
+        jnp.asarray(fscn.max_backlog), control_code=jnp.int32(0))
+    np.testing.assert_array_equal(np.asarray(coded.served),
+                                  np.asarray(fres.served))
+
+
+# ------------------------------------------------------------- new policies
+
+
+def test_static_wc_work_conserving_between_static_and_nobw():
+    """The work-conserving static variant must recover the capacity static
+    TBF strands under the noisy-neighbor scenario (its entire point),
+    without degrading the well-provisioned jobs below their static service,
+    and with contended spare following priority (hog below its No-BW take)."""
+    scn = get_scenario("fleet_noisy_neighbor", duration_s=10.0)
+    tot, noisy, per_job = {}, {}, {}
+    for control in ("static", "static_wc", "nobw"):
+        _, res = run_fleet(scn, control)
+        served = np.asarray(res.served)
+        tot[control] = served.sum()
+        noisy[control] = served[..., -1].sum()
+        per_job[control] = served.sum(axis=(0, 1))
+    assert tot["static_wc"] > tot["static"] * 1.1      # work conservation
+    assert tot["static_wc"] <= tot["nobw"] * 1.02      # bounded by no-control
+    # re-granting spare never starves the wide high-priority jobs
+    assert (per_job["static_wc"][:4] >= per_job["static"][:4] * 0.98).all()
+    # ...and spare under contention follows priority, not queue depth
+    assert noisy["static_wc"] < noisy["nobw"]
+
+
+def test_aimd_probes_back_to_high_utilization():
+    """The AIMD feedback throttler must keep a saturated fleet near full
+    utilization (decrease fires only while its rules bind; additive probing
+    recovers each cut) and keep every job progressing (floor > 0)."""
+    scn = get_scenario("fleet_ost_imbalance", duration_s=12.0)
+    cfg, res = run_fleet(scn, "aimd")
+    served = np.asarray(res.served)
+    cap_w = scn.capacity_per_tick * cfg.window_ticks
+    util = served.sum(axis=-1) / cap_w[None, :]        # [W, O]
+    # skip the cold-start ramp; saturated demand must keep utilization high
+    assert util[20:].mean() > 0.8
+    assert (served.sum(axis=(0, 1)) > 0).all()
+
+
+def test_aimd_confines_hog_relative_to_nobw():
+    """Feedback throttling must take a real bite out of the noisy job
+    whenever its targets saturate, while moving more aggregate than the
+    always-on adaptbf confinement."""
+    scn = get_scenario("fleet_noisy_neighbor", duration_s=10.0)
+    _, res_a = run_fleet(scn, "aimd")
+    _, res_n = run_fleet(scn, "nobw")
+    hog_a = np.asarray(res_a.served)[..., -1].sum()
+    hog_n = np.asarray(res_n.served)[..., -1].sum()
+    assert hog_a < hog_n * 0.85
+
+
+def test_aimd_rates_respond_to_congestion():
+    """Direct state check on the AIMD policy: saturation multiplies rates
+    down, idle capacity adds back up."""
+    from repro.core.policies import PolicyContext, WindowObs
+    pol = get_policy("aimd")
+    ctx = PolicyContext(nodes=jnp.ones((1, 4)), cap_w=jnp.asarray([100.0]))
+    rate0 = pol.init_state(ctx)
+    obs_hot = WindowObs(served=jnp.full((1, 4), 25.0),
+                        demand=jnp.full((1, 4), 60.0),
+                        alloc=jnp.full((1, 4), 25.0))
+    rate_hot, _ = pol.step(rate0, obs_hot, ctx)
+    assert (np.asarray(rate_hot) < np.asarray(rate0)).all()
+    obs_cold = WindowObs(served=jnp.full((1, 4), 5.0),
+                         demand=jnp.full((1, 4), 60.0),
+                         alloc=jnp.full((1, 4), 25.0))
+    rate_cold, _ = pol.step(rate0, obs_cold, ctx)
+    assert (np.asarray(rate_cold) > np.asarray(rate0)).all()
