@@ -41,7 +41,6 @@ import numpy as np
 
 from repro.kernels import dispatch
 from repro.kernels.adaptbf_alloc import ops as alloc_ops
-from repro.kernels.fleet_window import ops as window_ops
 from repro.storage import FleetConfig, simulate_fleet
 
 GRID_O = (16, 64, 256)
@@ -92,8 +91,8 @@ def run_cell(o: int, j: int, alloc_backend: str, serve_backend: str,
         "windows_per_s": n_windows / wall,
         "wall_per_sim_s": wall / sim_seconds,
         "compile_s": compile_s,
-        "alloc_block_o": alloc_ops._block_o(jp),
-        "serve_block_o": window_ops._block_o(jp, window_ticks),
+        "alloc_block_o": dispatch.block_rows(o, jp, alloc_ops._LIVE_ROWS),
+        "serve_block_o": dispatch.block_rows(o, jp, window_ticks + 10),
     }
 
 

@@ -9,6 +9,16 @@ one row per storage target, one column per job -- and MUST keep the paper's
 decentralization property: no operation may mix rows.  The single-target
 simulator is simply the ``O = 1`` view of the same engine.
 
+The row contract is also the *sharding* contract
+(``FleetConfig(partition="ost_shard")``, DESIGN.md section 8): under
+``shard_map`` every method sees only its device's OST rows, so policy state
+pytrees must be **shard-stable** -- built from ``ctx`` shapes alone
+(``ctx.nodes`` is the local ``[O, J]`` slice, ``ctx.cap_w`` the local
+``[O]``), every leaf carrying a leading O axis or none at all, and never a
+global constant sized to the whole fleet.  A policy that honours the
+no-row-mixing rule is automatically bitwise-identical sharded vs not; one
+that reduces across rows will fail ``tests/test_sharding.py``.
+
 Policies are registered by name::
 
     @register_policy("my_policy")

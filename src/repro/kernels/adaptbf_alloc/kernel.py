@@ -12,7 +12,7 @@ vector-unit friendly, exact, and O(J) in VMEM, so the kernel and the core
 allocator literally cannot drift apart.
 
 Block sizing: BLOCK_O x J with J padded to a lane multiple (128).  VMEM
-footprint ~ 16 live [BLOCK_O, J] f32 arrays (see ops._block_o); BLOCK_O=8
+footprint ~ 16 live [BLOCK_O, J] f32 arrays (see dispatch.block_rows); BLOCK_O=8
 holds out to J=16384, where the old [BLOCK_O, J, J] rank matrix forced
 BLOCK_O=1 by J~1448 and made J=4096 (64 MB) impossible at any block size.
 """

@@ -6,33 +6,31 @@ from __future__ import annotations
 
 from repro.kernels.adaptbf_alloc import ref
 from repro.kernels.adaptbf_alloc.kernel import fleet_alloc_pallas
+from repro.kernels.dispatch import block_rows as _block_rows
 from repro.kernels.dispatch import on_tpu as _on_tpu
 from repro.kernels.dispatch import pad_lanes as _pad_lanes
 from repro.kernels.dispatch import pad_to as _pad_to
 
-
-def _block_o(j: int) -> int:
-    """Largest OST block whose working set fits comfortably in VMEM.
-
-    The top-k selection in core/remainder keeps ~16 live [block_o, J] f32
-    arrays (inputs, outputs, selection temporaries) -- O(J) per row, so
-    block_o stays 8 out to J=16384.  The old [block_o, J, J] rank matrix
-    bound forced block_o=1 by J~1448 and could not fit J=4096 at all.
-    """
-    for b in (8, 4, 2, 1):
-        if 16 * b * j * 4 <= 8 * 2**20:
-            return b
-    return 1
+# The top-k selection in core/remainder keeps ~16 live [block_o, J] f32
+# arrays (inputs, outputs, selection temporaries) -- O(J) per row, so
+# block_o stays 8 out to J=16384.  The old [block_o, J, J] rank matrix
+# bound forced block_o=1 by J~1448 and could not fit J=4096 at all.
+_LIVE_ROWS = 16
 
 
 def fleet_alloc(demand, nodes, record, remainder, alloc_prev, capacity,
                 *, u_max: float = 64.0, interpret: bool = None):
-    """[O, J] arrays + [O] capacity -> (alloc, new_record, new_remainder)."""
+    """[O, J] arrays + [O] capacity -> (alloc, new_record, new_remainder).
+
+    ``O`` may be the whole fleet or a per-device shard
+    (``partition="ost_shard"``): the row block is capped at ``O`` so a
+    small local slice is dispatched as exactly its own rows.
+    """
     if interpret is None:
         interpret = not _on_tpu()
     o, j = demand.shape
     jp = _pad_lanes(j)
-    bo = _block_o(jp)
+    bo = _block_rows(o, jp, _LIVE_ROWS)
     args = [_pad_to(_pad_to(x, jp, 1), bo, 0)
             for x in (demand, nodes, record, remainder, alloc_prev)]
     cap = _pad_to(capacity.reshape(-1), bo, 0)

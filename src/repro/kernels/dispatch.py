@@ -32,3 +32,21 @@ def pad_to(x, m, axis, value=0.0):
 def pad_lanes(j: int) -> int:
     """Job-axis size padded up to the TPU lane multiple (128)."""
     return max(128, j + (-j) % 128)
+
+
+def block_rows(n_rows: int, j: int, live_rows: int,
+               budget_bytes: int = 8 * 2**20) -> int:
+    """Largest power-of-two OST block (<= 8) whose working set fits VMEM.
+
+    ``live_rows`` is how many [block, J] f32 arrays the kernel keeps live
+    per block (inputs + outputs + temporaries).  The block is additionally
+    capped at ``n_rows`` so a sharded engine (``partition="ost_shard"``)
+    handing each device a small local OST slice never pads a 1-row shard
+    out to an 8-row block -- the per-shard grid stays exactly the local
+    work.  One definition for every kernel package so row-block policy
+    cannot drift between dispatchers.
+    """
+    for b in (8, 4, 2, 1):
+        if b <= max(n_rows, 1) and live_rows * b * j * 4 <= budget_bytes:
+            return b
+    return 1

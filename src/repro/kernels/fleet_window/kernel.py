@@ -18,7 +18,7 @@ dispatch, so kernel parity automatically covers every policy.
 
 VMEM footprint ~ (window_ticks + 10) x BLOCK_O x J f32 arrays: the rate
 trace block dominates; BLOCK_O=8 holds through J=8192 at the default
-10-tick window (see ops._block_o).
+10-tick window (see dispatch.block_rows, capped at the local row count).
 """
 from __future__ import annotations
 

@@ -8,6 +8,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.dispatch import block_rows as _block_rows
 from repro.kernels.dispatch import on_tpu as _on_tpu
 from repro.kernels.dispatch import pad_lanes as _pad_lanes
 from repro.kernels.dispatch import pad_to as _pad_to
@@ -16,15 +17,6 @@ from repro.kernels.fleet_window.kernel import (
     fleet_window_pallas,
     serve_tick_block,
 )
-
-
-def _block_o(j: int, w: int) -> int:
-    # the [W, block_o, J] rate-trace block dominates VMEM alongside ~10
-    # [block_o, J] state/temp arrays; keep the sum under ~8 MB (f32)
-    for b in (8, 4, 2, 1):
-        if (w + 10) * b * j * 4 <= 8 * 2**20:
-            return b
-    return 1
 
 
 def _serve_window_xla(queue, vol_left, budget, rates, backlog_cap, cap):
@@ -61,7 +53,10 @@ def fleet_window_serve(queue, vol_left, budget, rates, backlog_cap, cap_tick,
     o, j = queue.shape
     w = rates.shape[0]
     jp = _pad_lanes(j)
-    bo = _block_o(jp, w)
+    # the [W, block_o, J] rate-trace block dominates VMEM alongside ~10
+    # [block_o, J] state/temp arrays; keep the sum under ~8 MB (f32), and
+    # never block wider than the (possibly sharded-local) row count
+    bo = _block_rows(o, jp, w + 10)
     args = [_pad_to(_pad_to(x, jp, 1), bo, 0)
             for x in (queue, vol_left, budget, backlog_cap)]
     rates_p = _pad_to(_pad_to(rates, jp, 2), bo, 1)

@@ -7,7 +7,30 @@ extends data parallelism across the inter-pod links.
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
+import numpy as np
+
+
+def ost_mesh(n_devices: Optional[int] = None) -> jax.sharding.Mesh:
+    """1-D mesh over the ``ost`` axis for the sharded window engine
+    (``FleetConfig(partition="ost_shard")``).
+
+    The engine always calls this bare (every visible device) -- on CPU,
+    force a count with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+    *before* the process starts.  ``n_devices`` restricts the mesh to a
+    prefix of the device list for callers building their own ``shard_map``
+    programs over the same axis.
+    """
+    devices = jax.devices()
+    if n_devices is not None:
+        if n_devices > len(devices):
+            raise ValueError(
+                f"ost_mesh: asked for {n_devices} devices, "
+                f"have {len(devices)}")
+        devices = devices[:n_devices]
+    return jax.sharding.Mesh(np.array(devices), ("ost",))
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:

@@ -169,9 +169,15 @@ def streaming_fairness(stats, nodes) -> float:
 
 
 def streaming_mean_utilization(stats, busy_only: bool = True) -> float:
-    """Twin of ``mean_utilization`` (same busy-window semantics)."""
+    """Twin of ``mean_utilization`` (same busy-window semantics).
+
+    A fleet-idle window contributes zero utilization on every OST, so the
+    sum of per-window fleet means over *busy* windows equals the fleet mean
+    of the per-OST ``util_sum`` rows -- which is all the carry keeps (the
+    per-OST layout is what makes the carry OST-shardable, DESIGN.md
+    section 8)."""
     if busy_only and int(stats.busy_windows) > 0:
-        return float(_ksum(stats, "util_busy_sum")) / int(stats.busy_windows)
+        return float(_ksum(stats, "util_sum").mean()) / int(stats.busy_windows)
     windows = max(int(stats.windows), 1)
     return float(_ksum(stats, "util_sum").mean()) / windows
 
@@ -181,6 +187,8 @@ def streaming_p99_queue(stats, q: float = 99.0) -> float:
     the upper edge of the bin holding the q-th percentile (within one bin
     width, ~16%/bin at the default 128-bin resolution)."""
     hist = _ksum(stats, "lag_hist")
+    if hist.ndim == 2:  # fleet carry keeps one histogram row per OST
+        hist = hist.sum(axis=0)
     total = hist.sum()
     if total == 0:
         return 0.0

@@ -52,6 +52,13 @@ routes through the generic ``CodedPolicy`` combinator so a benchmark sweep
 can ``vmap`` one compiled program over scenarios x policies
 (``benchmarks/fleet_sweep.py``).
 
+Because every per-window op is row-local, the same loop shards across
+devices: ``FleetConfig(partition="ost_shard")`` runs ``_run_windows`` under
+``shard_map`` over a 1-D ``ost`` device mesh, each device owning a
+contiguous block of OST rows (queues, token state, policy state, telemetry
+carries all device-local), bitwise-equal to the single-device run
+(``tests/test_sharding.py``, DESIGN.md section 8).
+
 Telemetry is selectable (``telemetry="trajectory" | "streaming"``):
 trajectory mode materializes the full ``[n_windows, O, J]`` outputs the
 paper-figure harnesses consume; streaming mode reduces per-window metric
@@ -115,6 +122,10 @@ class FleetConfig(NamedTuple):
     telemetry: str = "trajectory"      # trajectory | streaming
     coded_policies: tuple = DEFAULT_CODED_POLICIES
                                        # member subset for control="coded"
+    partition: str = "none"            # none (single device) | ost_shard
+                                       #   (shard_map over the OST axis of a
+                                       #   1-D device mesh; bitwise-equal to
+                                       #   the single-device run)
 
 
 class SimResult(NamedTuple):
@@ -208,12 +219,17 @@ def _serve_tick(queue, vol_left, budget, rate_t, backlog_cap, capacity):
 
 def _run_windows(cfg: FleetConfig, policy: ControlPolicy, nodes, rates,
                  volume, cap_tick, backlog_cap, control_code,
-                 n_windows: Optional[int]):
+                 n_windows: Optional[int], axis_name: Optional[str] = None):
     """The single window loop behind both entry points.
 
     nodes/volume/backlog_cap: [O, J]; rates: [T, O, J]; cap_tick: [O].
     ``n_windows`` extends (or trims) the horizon by indexing the trace
     periodically; None runs exactly the windows the trace covers.
+
+    ``axis_name`` names the mesh axis when the loop runs inside
+    ``shard_map`` (``partition="ost_shard"``): every array above is then
+    the *local* OST shard and the only cross-device op is the streaming
+    busy-flag psum (``telemetry.update_stats``).
 
     Returns ``(queue_final, outs)`` where ``outs`` is the per-window
     (served, demand, alloc, record) stack in trajectory mode or the final
@@ -274,7 +290,7 @@ def _run_windows(cfg: FleetConfig, policy: ControlPolicy, nodes, rates,
             ctx)
         if streaming:
             stats = telemetry.update_stats(stats, served_w, demand, alloc,
-                                           cap_w)
+                                           cap_w, axis_name=axis_name)
             out = None
         else:
             out = (served_w, demand, alloc, policy.record(pstate, ctx))
@@ -292,6 +308,68 @@ def _run_windows(cfg: FleetConfig, policy: ControlPolicy, nodes, rates,
     (_, queue, _, _, _, stats), outs = jax.lax.scan(
         window_fn, carry0, xs, length=n_windows)
     return queue, (stats if streaming else outs)
+
+
+def _run_windows_sharded(cfg: FleetConfig, policy: ControlPolicy, nodes,
+                         rates, volume, cap_tick, backlog_cap, control_code,
+                         n_windows: Optional[int]):
+    """``_run_windows`` under ``shard_map`` over a 1-D device mesh on the
+    OST axis (``partition="ost_shard"``).
+
+    Per-OST queues, token state, policy state, and streaming-telemetry
+    carries all live on the device that owns the row: the window loop's
+    body is row-local by the decentralization contract (``core/policies``),
+    so each shard runs the *same program* the single-device engine runs on
+    its rows and the concatenated result is bitwise identical.  The only
+    per-window mesh crossing is the int32 busy-flag psum in streaming mode
+    (exact -- see ``telemetry.update_stats``); trajectories stay sharded
+    until the caller gathers them.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.launch.mesh import ost_mesh
+
+    n_ost = rates.shape[1]
+    mesh = ost_mesh()
+    n_dev = mesh.devices.size
+    if n_ost % n_dev:
+        raise ValueError(
+            f'partition="ost_shard" needs n_ost ({n_ost}) divisible by the '
+            f"mesh size ({n_dev} devices); pad the fleet or force a "
+            "compatible device count (--xla_force_host_platform_device_count)")
+
+    def body(nodes, rates, volume, cap_tick, backlog_cap, *maybe_code):
+        code = maybe_code[0] if maybe_code else None
+        return _run_windows(cfg, policy, nodes, rates, volume, cap_tick,
+                            backlog_cap, code, n_windows, axis_name="ost")
+
+    oj = P("ost", None)
+    in_specs = [oj, P(None, "ost", None), oj, P("ost"), oj]
+    args = [nodes, rates, volume, cap_tick, backlog_cap]
+    if control_code is not None:
+        in_specs.append(P())
+        args.append(control_code)
+    if cfg.telemetry == "streaming":
+        outs_specs = telemetry.stats_pspecs("ost")
+    else:
+        outs_specs = (P(None, "ost", None),) * 4
+    run = shard_map(body, mesh=mesh, in_specs=tuple(in_specs),
+                    out_specs=(oj, outs_specs), check_rep=False)
+    return run(*args)
+
+
+def _dispatch_windows(cfg: FleetConfig, policy: ControlPolicy, nodes, rates,
+                      volume, cap_tick, backlog_cap, control_code,
+                      n_windows: Optional[int]):
+    if cfg.partition == "ost_shard":
+        return _run_windows_sharded(cfg, policy, nodes, rates, volume,
+                                    cap_tick, backlog_cap, control_code,
+                                    n_windows)
+    if cfg.partition == "none":
+        return _run_windows(cfg, policy, nodes, rates, volume, cap_tick,
+                            backlog_cap, control_code, n_windows)
+    raise ValueError(f"unknown partition: {cfg.partition!r}")
 
 
 def _resolve_policy(cfg, control_code) -> ControlPolicy:
@@ -393,6 +471,11 @@ def simulate_fleet(
     Returns:
       FleetResult with [n_windows, O, J] trajectories, or StreamResult when
       ``cfg.telemetry == "streaming"``.
+
+    With ``cfg.partition == "ost_shard"`` the window loop runs under
+    ``shard_map`` on a 1-D mesh over every visible device (the device
+    count must divide ``n_ost``); results are bitwise identical to the
+    default single-device execution.
     """
     _t, n_ost, n_jobs = issue_rate.shape
     policy = _resolve_policy(cfg, control_code)
@@ -408,7 +491,7 @@ def simulate_fleet(
     else:
         backlog_cap = jnp.asarray(max_backlog, jnp.float32)
 
-    queue, outs = _run_windows(
+    queue, outs = _dispatch_windows(
         cfg, policy, nodes, jnp.asarray(issue_rate, jnp.float32), volume,
         cap_tick, backlog_cap, control_code, n_windows)
     window_seconds = cfg.window_ticks * cfg.tick_seconds

@@ -6,8 +6,21 @@ evaluation sweeps (2000+ windows at fleet scale would be gigabytes).  With
 ``FleetConfig(telemetry="streaming")`` the engine instead folds each
 window's observation into the ``StreamStats`` carry below *inside* the
 ``lax.scan``, so peak memory is independent of horizon length: a handful of
-``[O, J]`` sufficient statistics, per-OST utilization sums, scalar backlog
-moments, and a fixed-width log-spaced backlog histogram.
+``[O, J]`` sufficient statistics, per-OST utilization/backlog sums, and a
+fixed-width log-spaced backlog histogram per OST.
+
+Row decomposition (the sharding contract, DESIGN.md section 8): every
+accumulator keeps a leading OST axis and is updated from that OST's row
+alone, so under ``FleetConfig(partition="ost_shard")`` each device folds
+stats for its local OST rows and the concatenation of the shards is bitwise
+identical to the single-device carry.  Cross-OST reductions (fleet means,
+global histograms, global maxima) happen only in the numpy finalizers in
+``storage/metrics.py`` -- identically in both modes, after the run.  The one
+exception is the fleet-busy flag (a window is *busy* when any OST served
+anything): that is a per-window OR across the whole fleet, kept exact under
+sharding by summing int32 busy-OST counts with ``lax.psum`` -- integer
+addition is associative, so the flag (and the int32 ``busy_windows``
+counter) cannot drift with device count.
 
 Accuracy at extreme horizons: JAX runs f32 by default, and a plain f32
 running sum silently drops increments once the total passes 2^24 (a job
@@ -22,15 +35,16 @@ The numpy finalizers that turn a ``StreamStats`` into report metrics live in
 counterparts, and are tested to agree with them on every registered scenario
 (``tests/test_streaming_telemetry.py``).
 
-Carry memory budget (f32, compensation included): ``14 x [O, J] + 2 x [O]
-+ 2 x NBINS + O(1)`` -- at O=64, J=1024 that is ~3.7 MB regardless of
+Carry memory budget (f32, compensation included): ``14 x [O, J] + 7 x [O]
++ 2 x [O, NBINS] + O(1)`` -- at O=64, J=1024 that is ~3.7 MB regardless of
 whether the run is 20 windows or 20 million (the trajectory equivalent at
 2000 windows: ~2.1 GB).
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 
 NBINS = 128            # backlog histogram resolution
@@ -48,7 +62,6 @@ class StreamComp(NamedTuple):
     alloc_sum: jnp.ndarray
     alloc_sumsq: jnp.ndarray
     util_sum: jnp.ndarray
-    util_busy_sum: jnp.ndarray
     lag_sum: jnp.ndarray
     lag_sumsq: jnp.ndarray
     lag_hist: jnp.ndarray
@@ -58,9 +71,12 @@ class StreamStats(NamedTuple):
     """Sufficient statistics folded into the window-scan carry.
 
     Per-job arrays are [O, J] from the fleet engine ([J] after the
-    single-target squeeze); everything else is O(1) in the horizon.
-    Float sums are Kahan-compensated (see ``comp``); finalizers should add
-    the matching compensation term for the best estimate.
+    single-target squeeze); per-target arrays are [O] ([] squeezed); the
+    histogram is [O, NBINS] ([NBINS] squeezed).  Only ``windows`` and
+    ``busy_windows`` are fleet-global scalars -- both int32, both exact
+    under OST sharding.  Float sums are Kahan-compensated (see ``comp``);
+    finalizers should add the matching compensation term for the best
+    estimate.
     """
 
     windows: jnp.ndarray        # () int32: windows accumulated
@@ -72,12 +88,11 @@ class StreamStats(NamedTuple):
     alloc_sumsq: jnp.ndarray    # [O, J]
     alloc_windows: jnp.ndarray  # [O, J] int32 windows with a finite alloc
     util_sum: jnp.ndarray       # [O] sum over windows of per-OST utilization
-    util_busy_sum: jnp.ndarray  # () sum over *busy* windows of fleet-mean util
     busy_windows: jnp.ndarray   # () int32: windows where anything was served
-    lag_sum: jnp.ndarray        # () sum of backlog growth (demand - served)
-    lag_sumsq: jnp.ndarray      # ()
-    lag_max: jnp.ndarray        # ()
-    lag_hist: jnp.ndarray       # [NBINS] log-spaced backlog histogram
+    lag_sum: jnp.ndarray        # [O] sum of backlog growth (demand - served)
+    lag_sumsq: jnp.ndarray      # [O]
+    lag_max: jnp.ndarray        # [O] max per-job backlog growth seen
+    lag_hist: jnp.ndarray       # [O, NBINS] log-spaced backlog histogram
     last_served: jnp.ndarray    # [O, J] int32 last window with service (-1)
     comp: StreamComp            # Kahan compensation for the float sums
 
@@ -85,8 +100,7 @@ class StreamStats(NamedTuple):
 def init_stats(n_ost: int, n_jobs: int) -> StreamStats:
     zoj = jnp.zeros((n_ost, n_jobs), jnp.float32)
     zo = jnp.zeros((n_ost,), jnp.float32)
-    zh = jnp.zeros((NBINS,), jnp.float32)
-    f0 = jnp.float32(0.0)
+    zh = jnp.zeros((n_ost, NBINS), jnp.float32)
     return StreamStats(
         windows=jnp.int32(0),
         served_sum=zoj, served_sumsq=zoj,
@@ -94,15 +108,39 @@ def init_stats(n_ost: int, n_jobs: int) -> StreamStats:
         alloc_sum=zoj, alloc_sumsq=zoj,
         alloc_windows=jnp.zeros((n_ost, n_jobs), jnp.int32),
         util_sum=zo,
-        util_busy_sum=f0, busy_windows=jnp.int32(0),
-        lag_sum=f0, lag_sumsq=f0, lag_max=f0,
+        busy_windows=jnp.int32(0),
+        lag_sum=zo, lag_sumsq=zo, lag_max=zo,
         lag_hist=zh,
         last_served=jnp.full((n_ost, n_jobs), -1, jnp.int32),
         comp=StreamComp(
             served_sum=zoj, served_sumsq=zoj, demand_sum=zoj,
             demand_sumsq=zoj, alloc_sum=zoj, alloc_sumsq=zoj,
-            util_sum=zo, util_busy_sum=f0, lag_sum=f0, lag_sumsq=f0,
-            lag_hist=zh),
+            util_sum=zo, lag_sum=zo, lag_sumsq=zo, lag_hist=zh),
+    )
+
+
+def stats_pspecs(axis: str):
+    """A ``StreamStats`` of ``PartitionSpec``s for ``shard_map`` out_specs:
+    everything row-sharded over ``axis`` except the two scalar counters."""
+    from jax.sharding import PartitionSpec as P
+    oj = P(axis, None)
+    o = P(axis)
+    rep = P()
+    return StreamStats(
+        windows=rep,
+        served_sum=oj, served_sumsq=oj,
+        demand_sum=oj, demand_sumsq=oj,
+        alloc_sum=oj, alloc_sumsq=oj,
+        alloc_windows=oj,
+        util_sum=o,
+        busy_windows=rep,
+        lag_sum=o, lag_sumsq=o, lag_max=o,
+        lag_hist=oj,
+        last_served=oj,
+        comp=StreamComp(
+            served_sum=oj, served_sumsq=oj, demand_sum=oj, demand_sumsq=oj,
+            alloc_sum=oj, alloc_sumsq=oj, util_sum=o,
+            lag_sum=o, lag_sumsq=o, lag_hist=oj),
     )
 
 
@@ -128,22 +166,31 @@ def bin_upper_edge(b) -> float:
         / NBINS))
 
 
-def update_stats(stats: StreamStats, served_w, demand, alloc,
-                 cap_w) -> StreamStats:
+def update_stats(stats: StreamStats, served_w, demand, alloc, cap_w,
+                 axis_name: Optional[str] = None) -> StreamStats:
     """Fold one window's [O, J] observation into the carry.
 
     Mirrors the post-hoc definitions in ``storage/metrics.py`` exactly:
     per-window utilization is ``served.sum(jobs) / cap_w``, a window is
     *busy* when any OST served anything, and the allocation moments mask
     unruled (infinite) entries.
+
+    Every update touches only its own OST row, except the busy flag: with
+    ``axis_name`` set (inside ``shard_map``) the int32 busy-OST count is
+    ``psum``-med across the mesh so the flag matches the unsharded run bit
+    for bit (integer addition cannot reorder-drift).
     """
+    n_ost = served_w.shape[0]
     util_o = jnp.sum(served_w, axis=-1) / jnp.maximum(cap_w, 1e-12)
-    busy = jnp.sum(util_o) > 0
+    busy_osts = jnp.sum((jnp.sum(served_w, axis=-1) > 0).astype(jnp.int32))
+    if axis_name is not None:
+        busy_osts = jax.lax.psum(busy_osts, axis_name)
+    busy = busy_osts > 0
     lag = demand - served_w
     ruled = jnp.isfinite(alloc)
     alloc_f = jnp.where(ruled, alloc, 0.0)
-    window_hist = jnp.zeros((NBINS,), jnp.float32).at[
-        lag_bin(lag).ravel()].add(1.0)
+    window_hist = jnp.zeros((n_ost, NBINS), jnp.float32).at[
+        jnp.arange(n_ost)[:, None], lag_bin(lag)].add(1.0)
     c = stats.comp
     served_sum, c_served_sum = _kahan(stats.served_sum, c.served_sum, served_w)
     served_sumsq, c_served_sumsq = _kahan(
@@ -155,12 +202,10 @@ def update_stats(stats: StreamStats, served_w, demand, alloc,
     alloc_sumsq, c_alloc_sumsq = _kahan(
         stats.alloc_sumsq, c.alloc_sumsq, alloc_f * alloc_f)
     util_sum, c_util_sum = _kahan(stats.util_sum, c.util_sum, util_o)
-    util_busy_sum, c_util_busy_sum = _kahan(
-        stats.util_busy_sum, c.util_busy_sum,
-        jnp.where(busy, jnp.mean(util_o), 0.0))
-    lag_sum, c_lag_sum = _kahan(stats.lag_sum, c.lag_sum, jnp.sum(lag))
+    lag_sum, c_lag_sum = _kahan(stats.lag_sum, c.lag_sum,
+                                jnp.sum(lag, axis=-1))
     lag_sumsq, c_lag_sumsq = _kahan(
-        stats.lag_sumsq, c.lag_sumsq, jnp.sum(lag * lag))
+        stats.lag_sumsq, c.lag_sumsq, jnp.sum(lag * lag, axis=-1))
     lag_hist, c_lag_hist = _kahan(stats.lag_hist, c.lag_hist, window_hist)
     return StreamStats(
         windows=stats.windows + 1,
@@ -169,10 +214,9 @@ def update_stats(stats: StreamStats, served_w, demand, alloc,
         alloc_sum=alloc_sum, alloc_sumsq=alloc_sumsq,
         alloc_windows=stats.alloc_windows + ruled.astype(jnp.int32),
         util_sum=util_sum,
-        util_busy_sum=util_busy_sum,
         busy_windows=stats.busy_windows + busy.astype(jnp.int32),
         lag_sum=lag_sum, lag_sumsq=lag_sumsq,
-        lag_max=jnp.maximum(stats.lag_max, jnp.max(lag)),
+        lag_max=jnp.maximum(stats.lag_max, jnp.max(lag, axis=-1)),
         lag_hist=lag_hist,
         last_served=jnp.where(served_w > 0, stats.windows,
                               stats.last_served),
@@ -180,8 +224,7 @@ def update_stats(stats: StreamStats, served_w, demand, alloc,
             served_sum=c_served_sum, served_sumsq=c_served_sumsq,
             demand_sum=c_demand_sum, demand_sumsq=c_demand_sumsq,
             alloc_sum=c_alloc_sum, alloc_sumsq=c_alloc_sumsq,
-            util_sum=c_util_sum, util_busy_sum=c_util_busy_sum,
-            lag_sum=c_lag_sum, lag_sumsq=c_lag_sumsq,
+            util_sum=c_util_sum, lag_sum=c_lag_sum, lag_sumsq=c_lag_sumsq,
             lag_hist=c_lag_hist),
     )
 
@@ -195,10 +238,14 @@ def squeeze_stats(stats: StreamStats) -> StreamStats:
         alloc_sum=stats.alloc_sum[0], alloc_sumsq=stats.alloc_sumsq[0],
         alloc_windows=stats.alloc_windows[0],
         util_sum=stats.util_sum[0],
+        lag_sum=stats.lag_sum[0], lag_sumsq=stats.lag_sumsq[0],
+        lag_max=stats.lag_max[0],
+        lag_hist=stats.lag_hist[0],
         last_served=stats.last_served[0],
         comp=c._replace(
             served_sum=c.served_sum[0], served_sumsq=c.served_sumsq[0],
             demand_sum=c.demand_sum[0], demand_sumsq=c.demand_sumsq[0],
             alloc_sum=c.alloc_sum[0], alloc_sumsq=c.alloc_sumsq[0],
-            util_sum=c.util_sum[0]),
+            util_sum=c.util_sum[0], lag_sum=c.lag_sum[0],
+            lag_sumsq=c.lag_sumsq[0], lag_hist=c.lag_hist[0]),
     )

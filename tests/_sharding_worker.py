@@ -1,0 +1,132 @@
+"""Subprocess worker for ``tests/test_sharding.py``: runs the sharded
+window engine under a forced host device count and proves it bitwise-equal
+to single-device execution.
+
+Must be a fresh process because the XLA device count is fixed at backend
+initialization -- the parent test sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before spawning.
+
+Three proofs, any mismatch exits nonzero with the offending key:
+
+1. every registered fleet scenario x every registered policy x both
+   telemetry modes, ``partition="ost_shard"`` vs the reference npz the
+   parent computed unsharded in-process;
+2. the committed pre-refactor ``tests/data/golden_fleet.npz`` trajectories,
+   reproduced by *sharded* runs of the same scenario x control grid -- the
+   sharded engine meets the exact bar the PR-3 engine collapse was held to;
+3. the divisibility guard: an OST count that does not divide the mesh must
+   raise, not silently mis-shard.
+"""
+import argparse
+import pathlib
+import sys
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.storage import FleetConfig, get_scenario, simulate_fleet
+from repro.storage.workloads import list_fleet_scenarios
+from repro.core.policies import list_policies
+
+DATA = pathlib.Path(__file__).parent / "data"
+#: shared with tests/test_sharding.py (which imports them from here, so
+#: the reference grid and the sharded rerun cannot drift apart)
+GRID_DURATION_S = 2.0
+GOLDEN_DURATION_S = 5.0        # duration the golden capture used
+GOLDEN_SCENARIOS = ("fleet_noisy_neighbor", "fleet_churn")
+GOLDEN_CONTROLS = ("adaptbf", "static", "nobw")
+TRAJ_FIELDS = ("served", "demand", "alloc", "record", "queue_final")
+
+
+def fleet_args(scn):
+    return (jnp.asarray(scn.nodes), jnp.asarray(scn.issue_rate),
+            jnp.asarray(scn.volume), jnp.asarray(scn.capacity_per_tick),
+            jnp.asarray(scn.max_backlog))
+
+
+def run_sharded(name, control, telemetry, duration_s):
+    scn = get_scenario(name, duration_s=duration_s)
+    cfg = FleetConfig(control=control, telemetry=telemetry,
+                      partition="ost_shard")
+    return simulate_fleet(cfg, *fleet_args(scn))
+
+
+def flatten_result(result, telemetry):
+    """One npz key per output array: named trajectory fields, or
+    enumerated StreamStats leaves (+ queue_final)."""
+    if telemetry == "trajectory":
+        return {f: np.asarray(getattr(result, f)) for f in TRAJ_FIELDS}
+    leaves = jax.tree.leaves(result.stats)
+    out = {f"stats_{i}": np.asarray(x) for i, x in enumerate(leaves)}
+    out["queue_final"] = np.asarray(result.queue_final)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--devices", type=int, required=True)
+    ap.add_argument("--reference", required=True,
+                    help="npz of unsharded runs from the parent process")
+    args = ap.parse_args()
+
+    if jax.device_count() != args.devices:
+        print(f"FATAL: expected {args.devices} forced host devices, "
+              f"got {jax.device_count()} (XLA_FLAGS not applied?)")
+        return 2
+
+    failures = []
+    reference = np.load(args.reference)
+
+    # -- proof 1: full scenario x policy x telemetry grid vs the reference
+    for name in list_fleet_scenarios():
+        for control in list_policies():
+            for telemetry in ("trajectory", "streaming"):
+                res = run_sharded(name, control, telemetry, GRID_DURATION_S)
+                for field, got in flatten_result(res, telemetry).items():
+                    key = f"{name}/{control}/{telemetry}/{field}"
+                    want = reference[key]
+                    if not (got.shape == want.shape
+                            and np.array_equal(got, want)):
+                        failures.append(key)
+                        print(f"MISMATCH {key}")
+
+    # -- proof 2: sharded runs vs the committed pre-refactor golden
+    golden = np.load(DATA / "golden_fleet.npz")
+    for name in GOLDEN_SCENARIOS:
+        for control in GOLDEN_CONTROLS:
+            res = run_sharded(name, control, "trajectory", GOLDEN_DURATION_S)
+            for field in TRAJ_FIELDS:
+                key = f"{name}/{control}/{field}"
+                if not np.array_equal(np.asarray(getattr(res, field)),
+                                      golden[key]):
+                    failures.append(f"golden:{key}")
+                    print(f"MISMATCH golden:{key}")
+
+    # -- proof 3: the divisibility guard (only observable on a real mesh)
+    if args.devices > 1:
+        o_bad = args.devices + 1 if (args.devices + 1) % args.devices else 3
+        try:
+            simulate_fleet(
+                FleetConfig(partition="ost_shard"),
+                jnp.ones(4), jnp.ones((10, o_bad, 4), jnp.float32),
+                jnp.full((o_bad, 4), jnp.inf, jnp.float32))
+            failures.append("divisibility-guard-missing")
+            print(f"MISMATCH divisibility guard did not raise for "
+                  f"n_ost={o_bad} on {args.devices} devices")
+        except ValueError:
+            pass
+
+    if failures:
+        print(f"FAILED: {len(failures)} mismatches on "
+              f"{args.devices} devices")
+        return 1
+    print(f"OK: sharded == single-device bitwise on {args.devices} devices "
+          f"({len(list_fleet_scenarios())} scenarios x "
+          f"{len(list_policies())} policies x 2 telemetry modes + golden)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

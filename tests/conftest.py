@@ -34,6 +34,31 @@ def pytest_collection_modifyitems(config, items):
             item.add_marker(pytest.mark.kernel)
 
 
+# ------------------------------------------------------ optional hypothesis
+#
+# hypothesis is a dev extra, not a runtime dependency: property-based
+# modules import the shim below (``from conftest import given, settings,
+# st, HAVE_HYPOTHESIS``) instead of copy-pasting their own try/except.
+# Without hypothesis, ``given`` degrades to a skip marker (the unit tests
+# keep covering the same invariants on fixed cases) and ``settings`` to a
+# no-op, so the decorated tests still collect cleanly -- CI runs a
+# hypothesis-less leg to keep this path green.
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+    st = None
+
+    def given(*args, **kwargs):  # pragma: no cover - exercised sans extra
+        return lambda fn: pytest.mark.skip(
+            reason="hypothesis not installed")(fn)
+
+    def settings(*args, **kwargs):  # pragma: no cover - exercised sans extra
+        return lambda fn: fn
+
+
 @pytest.fixture(autouse=True)
 def _deterministic_rng():
     np.random.seed(0)

@@ -3,12 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-
-try:
-    from hypothesis import given, settings, strategies as st
-    HAVE_HYPOTHESIS = True
-except ModuleNotFoundError:  # property tests below are skipped
-    HAVE_HYPOTHESIS = False
+from conftest import HAVE_HYPOTHESIS, given, settings, st
 
 from repro.core import (
     AllocatorState,
@@ -191,8 +186,9 @@ def test_integerize_respects_mask():
 
 
 # ----------------------------------------------------------- property tests
-# Skipped entirely when hypothesis is not installed (dev extra); the unit
-# tests above keep covering the same invariants on fixed cases.
+# Skipped when hypothesis is not installed (the shared shim in conftest.py
+# turns ``given`` into a skip marker); the unit tests above keep covering
+# the same invariants on fixed cases.
 
 if HAVE_HYPOTHESIS:
     j_count = st.integers(2, 12)
@@ -205,16 +201,10 @@ if HAVE_HYPOTHESIS:
         record = draw(st.lists(st.integers(-300, 300), min_size=j, max_size=j))
         cap = draw(st.integers(1, 20000))
         return demand, nodes, record, cap
-else:  # pragma: no cover - placeholders so the decorators below still apply
+else:  # pragma: no cover - placeholder so the decorators below still apply
 
     def window_case():
         return None
-
-    def given(*a, **k):
-        return lambda fn: pytest.mark.skip(reason="hypothesis not installed")(fn)
-
-    def settings(*a, **k):
-        return lambda fn: fn
 
 
 @pytest.mark.property

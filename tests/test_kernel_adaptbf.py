@@ -45,12 +45,17 @@ def test_capacity_sweep(cap):
 
 
 def test_block_o_stays_wide_at_fleet_scale():
-    """O(J)-memory selection: the dispatcher keeps 8-row blocks out to
-    J=4096 (and beyond), where the old [block_o, J, J] rank matrix forced
-    block_o=1 by J~1448 and could not fit J=4096 at any block size."""
-    assert ops._block_o(128) == 8
-    assert ops._block_o(1536) == 8
-    assert ops._block_o(4096) >= 4
+    """O(J)-memory selection: the shared dispatcher keeps 8-row blocks out
+    to J=4096 (and beyond), where the old [block_o, J, J] rank matrix
+    forced block_o=1 by J~1448 and could not fit J=4096 at any block size.
+    It also never blocks wider than the (possibly sharded-local) row count,
+    so a ``partition="ost_shard"`` shard dispatches exactly its own rows."""
+    from repro.kernels.dispatch import block_rows
+    assert block_rows(8, 128, ops._LIVE_ROWS) == 8
+    assert block_rows(8, 1536, ops._LIVE_ROWS) == 8
+    assert block_rows(8, 4096, ops._LIVE_ROWS) >= 4
+    assert block_rows(1, 128, ops._LIVE_ROWS) == 1
+    assert block_rows(2, 4096, ops._LIVE_ROWS) == 2
 
 
 @pytest.mark.slow

@@ -1,0 +1,80 @@
+"""Paper-figure parity: the committed ``experiments/paper/iv{d,e,f}_*.csv``
+timelines (the inputs to the paper's Figures 3-8 reproductions, written by
+``benchmarks/paper_figures.py``) are regenerated here from the same
+scenario x control pairs through the public simulator API and compared
+column by column.  An engine change that moves a paper figure now fails
+tier-1 instead of silently drifting the committed artifacts.
+
+The comparison is tolerance-based (not bitwise) so a benign cross-platform
+ulp cannot break CI, but tight enough that any real behavioral change --
+a different allocation, a shifted completion time, a changed lend/borrow
+record -- lands far outside it.
+"""
+import pathlib
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.storage import SimConfig, get_scenario, simulate
+
+PAPER = pathlib.Path(__file__).parent.parent / "experiments" / "paper"
+
+#: CSV stem -> (scenario name, duration the harness used).
+FIGURES = {
+    "ivd_allocation": ("allocation_ivd", 60.0),
+    "ive_redistribution": ("redistribution_ive", 60.0),
+    "ivf_recompensation": ("recompensation_ivf", 120.0),
+}
+CONTROLS = ("adaptbf", "static", "nobw")
+
+
+def _regenerate(scenario_name: str, control: str) -> np.ndarray:
+    """The exact column layout ``paper_figures._save_timeline`` writes:
+    t_s, mb_s per job, lend/borrow record per job."""
+    scn = get_scenario(scenario_name)
+    res = simulate(SimConfig(control=control), jnp.asarray(scn.nodes),
+                   jnp.asarray(scn.issue_rate), jnp.asarray(scn.volume),
+                   jnp.asarray(scn.max_backlog))
+    thr = np.asarray(res.throughput_mb_s)
+    rec = np.asarray(res.record)
+    t = np.arange(thr.shape[0]) * res.window_seconds
+    return np.column_stack(
+        [t] + [thr[:, j] for j in range(thr.shape[1])]
+        + [rec[:, j] for j in range(rec.shape[1])])
+
+
+def test_every_committed_paper_csv_has_a_parity_pair():
+    """No orphans in either direction: each committed CSV is one of the
+    figure x control pairs below, and every pair is committed."""
+    expected = {f"{stem}_{control}.csv"
+                for stem in FIGURES for control in CONTROLS}
+    committed = {p.name for p in PAPER.glob("*.csv")}
+    assert committed == expected, (
+        f"committed paper CSVs drifted from the parity matrix: "
+        f"only-committed={sorted(committed - expected)}, "
+        f"only-expected={sorted(expected - committed)}")
+
+
+@pytest.mark.parametrize("control", CONTROLS)
+@pytest.mark.parametrize("stem", sorted(FIGURES))
+def test_paper_timeline_parity(stem, control):
+    scenario_name, duration_s = FIGURES[stem]
+    path = PAPER / f"{stem}_{control}.csv"
+    header = path.open().readline().strip().split(",")
+    disk = np.loadtxt(path, delimiter=",", skiprows=1)
+
+    regen = _regenerate(scenario_name, control)
+    n_jobs = (regen.shape[1] - 1) // 2
+    assert header == (
+        ["t_s"] + [f"mb_s_job{j+1}" for j in range(n_jobs)]
+        + [f"record_job{j+1}" for j in range(n_jobs)]), f"{path.name}: header"
+    assert disk.shape == regen.shape, (
+        f"{path.name}: committed {disk.shape} vs regenerated {regen.shape} "
+        f"(window count or job count changed)")
+    assert disk.shape[0] == pytest.approx(duration_s * 10, abs=1)
+    np.testing.assert_allclose(
+        disk, regen, rtol=1e-5, atol=1e-5,
+        err_msg=f"{path.name}: regenerated timeline drifted from the "
+                "committed paper figure (regenerate experiments/paper/ via "
+                "benchmarks/paper_figures.py if the change is intended)")

@@ -132,7 +132,7 @@ def test_streaming_carry_is_horizon_independent():
     from repro.storage.telemetry import NBINS
     o, j = scn.issue_rate.shape[1], scn.nodes.shape[0]
     assert max(np.asarray(x).size
-               for x in jax.tree.leaves(short.stats)) == max(o * j, NBINS)
+               for x in jax.tree.leaves(short.stats)) == max(o * j, o * NBINS)
 
 
 def test_n_windows_tiles_the_trace_periodically():
@@ -176,7 +176,7 @@ def test_kahan_sums_survive_past_f32_precision_cliff():
     cliff = jnp.float32(2.0 ** 24)
     stats0 = stats0._replace(
         served_sum=jnp.full((1, 1), cliff),
-        util_busy_sum=cliff, windows=jnp.int32(2 ** 24))
+        util_sum=jnp.full((1,), cliff), windows=jnp.int32(2 ** 24))
     one = jnp.ones((1, 1), jnp.float32)
     cap = jnp.ones((1,), jnp.float32)
 
@@ -188,8 +188,8 @@ def test_kahan_sums_survive_past_f32_precision_cliff():
     # naive f32 would still read 2^24 exactly; compensated sums advance
     assert float(stats.served_sum[0, 0]) + float(
         stats.comp.served_sum[0, 0]) == 2.0 ** 24 + 20_000
-    assert float(stats.util_busy_sum) + float(
-        stats.comp.util_busy_sum) == 2.0 ** 24 + 20_000
+    assert float(stats.util_sum[0]) + float(
+        stats.comp.util_sum[0]) == 2.0 ** 24 + 20_000
     assert int(stats.windows) == 2 ** 24 + 20_000   # int32 counter is exact
 
 

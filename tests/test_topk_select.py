@@ -21,12 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-
-try:
-    from hypothesis import given, settings, strategies as st
-    HAVE_HYPOTHESIS = True
-except ModuleNotFoundError:
-    HAVE_HYPOTHESIS = False
+from conftest import HAVE_HYPOTHESIS, given, settings, st
 
 from repro.core.remainder import integerize, rank_desc, topk_mask
 
@@ -220,8 +215,9 @@ def test_corrections_conserve_far_out_of_contract():
 
 
 # ----------------------------------------------------------- property tests
-# Skipped entirely when hypothesis is not installed (dev extra); the fixed
-# cases above keep covering the same invariants.
+# Skipped when hypothesis is not installed (the shared shim in conftest.py
+# turns ``given`` into a skip marker); the fixed cases above keep covering
+# the same invariants.
 
 if HAVE_HYPOTHESIS:
 
@@ -231,17 +227,10 @@ if HAVE_HYPOTHESIS:
         seed = draw(st.integers(0, 2**31 - 1))
         k = draw(st.integers(0, 2 * j))
         return j, seed, k
-else:  # pragma: no cover - placeholders so the decorators still apply
+else:  # pragma: no cover - placeholder so the decorators still apply
 
     def selection_case():
         return None
-
-    def given(*a, **k):
-        return lambda fn: pytest.mark.skip(
-            reason="hypothesis not installed")(fn)
-
-    def settings(*a, **k):
-        return lambda fn: fn
 
 
 @pytest.mark.property
