@@ -19,6 +19,14 @@ Run:  PYTHONPATH=src python benchmarks/fleet_sweep.py [--out report.json]
                                                       [--backend core|pallas]
                                                       [--serve scan|fused]
                                                       [--policies adaptbf static ...]
+                                                      [--generator PROFILE ...]
+                                                      [--gen-count 4] [--gen-seed0 0]
+                                                      [--gen-ost 8] [--gen-jobs 8]
+
+With ``--generator`` the scenario axis becomes a procedural grid instead of
+the registry list: ``gen-count`` seeds drawn from each named
+``storage/scengen`` profile (same shape for every cell, so the whole grid
+still compiles once).
 """
 from __future__ import annotations
 
@@ -38,6 +46,8 @@ from repro.storage import (
     get_scenario,
     list_fleet_scenarios,
     list_policies,
+    random_fleet,
+    scengen,
     simulate_fleet,
 )
 from repro.storage import metrics
@@ -112,12 +122,31 @@ def build_sweep(cfg: FleetConfig):
     return jax.jit(over_scenarios)
 
 
+def generator_grid(profiles, gen_count: int, gen_seed0: int, gen_ost: int,
+                   gen_jobs: int, duration_s: float):
+    """(names, scenarios) for a procedural profile x seed grid."""
+    names, scenarios = [], []
+    for profile in profiles:
+        # unknown profiles raise inside random_fleet on the first draw
+        for seed in range(gen_seed0, gen_seed0 + gen_count):
+            names.append(f"gen_{profile}_s{seed}")
+            scenarios.append(random_fleet(
+                seed, n_ost=gen_ost, n_jobs=gen_jobs, profile=profile,
+                duration_s=duration_s))
+    return names, scenarios
+
+
 def sweep(duration_s: float = 20.0, window_ticks: int = 10,
           backend: str = "core", serve_backend: str = "scan",
-          policies=None):
+          policies=None, generator=None, gen_count: int = 4,
+          gen_seed0: int = 0, gen_ost: int = 8, gen_jobs: int = 8):
     policies = tuple(policies) if policies else tuple(list_policies())
-    names = list_fleet_scenarios()
-    scenarios = [get_scenario(n, duration_s=duration_s) for n in names]
+    if generator:
+        names, scenarios = generator_grid(
+            generator, gen_count, gen_seed0, gen_ost, gen_jobs, duration_s)
+    else:
+        names = list_fleet_scenarios()
+        scenarios = [get_scenario(n, duration_s=duration_s) for n in names]
     cfg = FleetConfig(control="coded", window_ticks=window_ticks,
                       alloc_backend=backend, serve_backend=serve_backend,
                       coded_policies=policies)
@@ -137,6 +166,7 @@ def sweep(duration_s: float = 20.0, window_ticks: int = 10,
             "window_ticks": window_ticks,
             "alloc_backend": backend,
             "serve_backend": serve_backend,
+            "generator": list(generator) if generator else None,
             "scenarios": names,
             "policies": list(policies),
             "grid_shape": list(served.shape),
@@ -194,14 +224,32 @@ def main():
                     metavar="NAME", help="policy subset to sweep (default: "
                     "every registered policy); names from "
                     "repro.storage.list_policies()")
+    ap.add_argument("--generator", nargs="+", default=None,
+                    metavar="PROFILE",
+                    help="sweep a procedural profile x seed grid instead of "
+                         "the scenario registry; profiles from "
+                         "repro.storage.scengen.PROFILES")
+    ap.add_argument("--gen-count", type=int, default=4,
+                    help="seeds per generator profile")
+    ap.add_argument("--gen-seed0", type=int, default=0)
+    ap.add_argument("--gen-ost", type=int, default=8)
+    ap.add_argument("--gen-jobs", type=int, default=8)
     args = ap.parse_args()
     if args.policies:
         unknown = set(args.policies) - set(list_policies())
         if unknown:
             ap.error(f"unknown policies {sorted(unknown)}; "
                      f"registered: {list_policies()}")
+    if args.generator:
+        unknown = set(args.generator) - set(scengen.PROFILES)
+        if unknown:
+            ap.error(f"unknown generator profiles {sorted(unknown)}; "
+                     f"have {sorted(scengen.PROFILES)}")
     report = sweep(duration_s=args.duration_s, backend=args.backend,
-                   serve_backend=args.serve, policies=args.policies)
+                   serve_backend=args.serve, policies=args.policies,
+                   generator=args.generator, gen_count=args.gen_count,
+                   gen_seed0=args.gen_seed0, gen_ost=args.gen_ost,
+                   gen_jobs=args.gen_jobs)
     text = json.dumps(report, indent=2, default=float)
     print(text)
     if args.out:

@@ -21,6 +21,14 @@ from repro.storage.simulator import (
     simulate_fleet,
     utilization,
 )
+from repro.storage.scengen import (
+    PROFILES,
+    JobSpec,
+    Trace,
+    build_fleet,
+    random_fleet,
+)
+from repro.storage import scengen
 from repro.storage.telemetry import StreamStats
 from repro.storage.striping import (
     FleetDemand,
@@ -64,6 +72,12 @@ __all__ = [
     "simulate",
     "simulate_fleet",
     "utilization",
+    "PROFILES",
+    "JobSpec",
+    "Trace",
+    "build_fleet",
+    "random_fleet",
+    "scengen",
     "FleetDemand",
     "route",
     "route_progressive",

@@ -20,11 +20,12 @@ routed across OSTs by a striping policy (``storage.striping``) for
 """
 from __future__ import annotations
 
+import inspect
 from typing import Callable, Dict, NamedTuple
 
 import numpy as np
 
-from repro.storage import striping
+from repro.storage import scengen, striping
 
 GB_RPCS = 1024          # RPCs per 1 GB file at 1 MB per RPC
 IN_FLIGHT_PER_PROC = 16  # Lustre client max_rpcs_in_flight
@@ -58,9 +59,33 @@ class FleetScenario(NamedTuple):
 SCENARIOS: Dict[str, Callable] = {}
 
 
+def _scenario_kind(fn) -> str:
+    """"Scenario" | "FleetScenario" | "" from a builder's return annotation
+    (``from __future__ import annotations`` makes annotations strings, so
+    both the class object and its possibly-dotted name are accepted).  The
+    single parser behind registration and ``list_fleet_scenarios`` -- the
+    two must never disagree on what a builder returns."""
+    ann = getattr(fn, "__annotations__", {}).get("return")
+    name = ann.split(".")[-1] if isinstance(ann, str) else \
+        getattr(ann, "__name__", "")
+    return name if name in ("Scenario", "FleetScenario") else ""
+
+
 def register_scenario(name: str):
-    """Decorator: register a scenario builder under ``name``."""
+    """Decorator: register a scenario builder under ``name``.
+
+    Builders must annotate their return type (``-> Scenario`` or
+    ``-> FleetScenario``): ``list_fleet_scenarios`` keys off that
+    annotation, not a naming convention, so a fleet builder is routed to
+    the fleet harnesses whatever it is called.
+    """
     def deco(fn):
+        if not _scenario_kind(fn):
+            raise ValueError(
+                f"scenario builder {fn!r} must annotate its return type as "
+                f"Scenario or FleetScenario (got "
+                f"{getattr(fn, '__annotations__', {}).get('return')!r}); "
+                "the registry dispatches on it")
         fn.scenario_name = name
         SCENARIOS[name] = fn
         return fn
@@ -68,11 +93,23 @@ def register_scenario(name: str):
 
 
 def get_scenario(name: str, **kwargs):
-    """Build a registered scenario by name."""
+    """Build a registered scenario by name.
+
+    Unknown or invalid keyword arguments raise ``ValueError`` naming the
+    builder's signature rather than surfacing a bare ``TypeError`` from
+    deep inside the builder.
+    """
     try:
         builder = SCENARIOS[name]
     except KeyError:
         raise ValueError(f"unknown scenario {name!r}; have {list_scenarios()}")
+    sig = inspect.signature(builder)
+    try:
+        sig.bind(**kwargs)
+    except TypeError as e:
+        raise ValueError(
+            f"bad arguments for scenario {name!r}: {e}; "
+            f"builder signature is {name}{sig}") from None
     return builder(**kwargs)
 
 
@@ -81,25 +118,27 @@ def list_scenarios():
 
 
 def list_fleet_scenarios():
-    """Names of scenarios whose builders produce a FleetScenario."""
-    return sorted(n for n in SCENARIOS if n.startswith("fleet_"))
+    """Names of scenarios whose builders produce a FleetScenario (keyed off
+    the builder's return annotation, not the name)."""
+    return sorted(n for n, fn in SCENARIOS.items()
+                  if _scenario_kind(fn) == "FleetScenario")
 
 
 # ----------------------------------------------------------- trace builders
+#
+# Thin eager wrappers over the ``storage/scengen`` trace algebra, kept for
+# the public API and the hand-written builders below.  Each is pinned
+# bitwise against its pre-refactor output (``tests/test_scengen.py``).
 
 
 def continuous(t_ticks: int, rate: float, start_tick: int = 0) -> np.ndarray:
-    out = np.zeros(t_ticks, np.float32)
-    out[start_tick:] = rate
-    return out
+    return scengen.constant(rate).shift(start_tick)(t_ticks)
 
 
 def active_between(t_ticks: int, rate: float, start_tick: int,
                    end_tick: int) -> np.ndarray:
     """A job that arrives at ``start_tick`` and departs at ``end_tick``."""
-    out = np.zeros(t_ticks, np.float32)
-    out[start_tick:end_tick] = rate
-    return out
+    return scengen.constant(rate).between(start_tick, end_tick)(t_ticks)
 
 
 def periodic_bursts(
@@ -111,11 +150,8 @@ def periodic_bursts(
 ) -> np.ndarray:
     """Short I/O bursts of ``burst_rpcs`` spread over ``burst_ticks`` ticks,
     repeating every ``interval_ticks``."""
-    out = np.zeros(t_ticks, np.float32)
-    per_tick = burst_rpcs / burst_ticks
-    for t0 in range(start_tick, t_ticks, interval_ticks):
-        out[t0 : t0 + burst_ticks] += per_tick
-    return out
+    return scengen.bursts(burst_rpcs, interval_ticks, burst_ticks,
+                          start_tick)(t_ticks)
 
 
 # ------------------------------------------------- paper (single-target)
@@ -315,3 +351,31 @@ def scenario_fleet_churn(
     return _route(
         "fleet_churn", nodes, issue, volume, backlog,
         np.full(n_ost, 20.0), duration_s, tick_s, stripe_count=stripe_count)
+
+
+# --------------------------------------------- generated fleet scenarios
+#
+# Seeded procedural draws from the ``storage/scengen`` profiles, registered
+# like any hand-written scenario so sweeps, the sharding suite, and the
+# metamorphic oracles pick them up with no special casing.  The default
+# ``n_ost=8`` keeps them divisible by every mesh size the sharded test
+# matrix forces (1/2/4/8 host devices).
+
+
+def _register_generated(profile: str):
+    def builder(seed: int = 0, n_ost: int = 8, n_jobs: int = 8,
+                duration_s: float = 20.0,
+                tick_s: float = 0.01) -> FleetScenario:
+        return scengen.random_fleet(seed, n_ost=n_ost, n_jobs=n_jobs,
+                                    profile=profile, duration_s=duration_s,
+                                    tick_s=tick_s)
+    builder.__name__ = f"scenario_gen_{profile}"
+    builder.__qualname__ = builder.__name__
+    builder.__doc__ = (f"Generated fleet scenario: seeded draw from the "
+                       f"scengen {profile!r} profile.")
+    return register_scenario(f"fleet_gen_{profile}")(builder)
+
+
+for _profile in sorted(scengen.PROFILES):
+    _register_generated(_profile)
+del _profile

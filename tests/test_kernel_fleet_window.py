@@ -1,12 +1,15 @@
 """Fused window-service kernel vs the simulator's per-tick scan oracle:
-shape/padding sweep in interpret mode, XLA-fallback parity, and end-to-end
-``simulate_fleet`` equivalence between the scan and fused serve backends."""
+shape/padding sweep in interpret mode, XLA-fallback parity, end-to-end
+``simulate_fleet`` equivalence between the scan and fused serve backends,
+and a differential cross-check of every backend combination on *generated*
+scenarios (``storage/scengen``) -- workload shapes nobody hand-tuned the
+kernels against."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.kernels.fleet_window import ops
-from repro.storage import FleetConfig, simulate_fleet
+from repro.storage import FleetConfig, random_fleet, simulate_fleet
 
 
 def _case(o, j, w, seed, unruled_frac=0.5):
@@ -90,6 +93,68 @@ def test_simulate_fleet_fused_matches_scan_end_to_end():
             fin = np.isfinite(a)
             np.testing.assert_allclose(a[fin], b[fin], atol=1e-3,
                                        err_msg=f"{control}/{field}")
+
+
+@pytest.mark.parametrize("profile,seed", [
+    ("mixed", 3), ("saturation", 11), ("burst", 7),
+])
+def test_generated_scenarios_agree_across_all_backends(profile, seed):
+    """Differential cross-check on generated scenarios: every
+    (alloc_backend, serve_backend) combination must tell the same story --
+    the hand-coded scenario suite cannot cover the trace shapes (Markov
+    on-off, churn masks, ramps) the generator manufactures.
+
+    Two sharpness levels, matching what is actually guaranteed:
+
+    * core vs pallas at a fixed serve backend is the *same allocator math*
+      (shared top-k selection) -- elementwise-tight on the whole
+      trajectory;
+    * scan vs fused replays the window's ticks in a different reduction
+      order, so a fractional-rate draw can land a remainder tie one ulp
+      apart, flip one integer token, and legitimately fork the closed-loop
+      trajectory from that window on.  Per-window equivalence *given the
+      same state* is the oracle tests' job above; end-to-end, the horizon
+      totals and final state structure must still agree.
+    """
+    scn = random_fleet(seed, n_ost=4, n_jobs=8, profile=profile,
+                       duration_s=3.0)
+    args = (jnp.asarray(scn.nodes), jnp.asarray(scn.issue_rate),
+            jnp.asarray(scn.volume), jnp.asarray(scn.capacity_per_tick),
+            jnp.asarray(scn.max_backlog))
+    results = {}
+    for alloc in ("core", "pallas"):
+        for serve in ("scan", "fused"):
+            cfg = FleetConfig(control="adaptbf", alloc_backend=alloc,
+                              serve_backend=serve)
+            results[(alloc, serve)] = simulate_fleet(cfg, *args)
+
+    # -- alloc backends: elementwise-tight at each serve backend
+    for serve in ("scan", "fused"):
+        a_res, b_res = results[("core", serve)], results[("pallas", serve)]
+        for field in ("served", "demand", "alloc", "record", "queue_final"):
+            a = np.asarray(getattr(a_res, field))
+            b = np.asarray(getattr(b_res, field))
+            np.testing.assert_array_equal(
+                np.isfinite(a), np.isfinite(b),
+                err_msg=f"{profile}/pallas-{serve}/{field}")
+            fin = np.isfinite(a)
+            np.testing.assert_allclose(
+                a[fin], b[fin], atol=1e-3,
+                err_msg=f"{profile}/pallas-{serve}/{field}")
+
+    # -- serve backends: horizon totals agree despite token-flip forks
+    ref, fused = results[("core", "scan")], results[("core", "fused")]
+    ref_j = np.asarray(ref.served, np.float64).sum(axis=(0, 1))
+    fus_j = np.asarray(fused.served, np.float64).sum(axis=(0, 1))
+    np.testing.assert_allclose(fus_j, ref_j, rtol=2e-2, atol=20.0,
+                               err_msg=f"{profile}: per-job totals")
+    np.testing.assert_allclose(fus_j.sum(), ref_j.sum(), rtol=5e-3,
+                               err_msg=f"{profile}: fleet total")
+    cap_w = np.asarray(scn.capacity_per_tick, np.float64) * 10
+    for name, r in (("scan", ref), ("fused", fused)):
+        per_ost = np.asarray(r.served, np.float64).sum(axis=-1)
+        assert (per_ost <= cap_w[None, :] + 1e-3).all(), f"{profile}/{name}"
+        assert (np.asarray(r.served) >= 0).all(), f"{profile}/{name}"
 
 
 def test_unknown_serve_backend_rejected():

@@ -1,0 +1,447 @@
+"""Metamorphic oracle suite: transformations of generated workloads with
+*known consequences*, asserted for every registered control policy and both
+telemetry modes (the oracle table lives in DESIGN.md section 9).
+
+No golden data, no hand-derived expectations -- each test relates two runs
+of the engine:
+
+* **OST permutation commutes** (bitwise): every engine/policy/telemetry op
+  is OST-row-local (the decentralization contract), so permuting targets
+  permutes every output row, bit for bit.
+* **Job permutation commutes** (to fp tolerance): no op singles out a job
+  index, but job-axis float reductions reassociate under permutation, so
+  equality is tight-allclose rather than bitwise.
+* **Uniform priority scaling is invariant** (bitwise for power-of-two
+  factors): every policy consumes priorities only through shares
+  n_x / sum(n), and scaling by 2^k is exact in binary floating point.
+* **Time-shifting an isolated burst time-shifts its service** (bitwise):
+  once the idle control state has converged (pre-roll), the engine is
+  time-invariant; a burst moved by whole windows moves its whole service
+  trajectory.
+* **Splitting a job conserves service** (tolerance): replacing one job by
+  two half-rate / half-priority / half-volume / half-backlog clones
+  preserves everyone's service (float tokens -- integerization would
+  round the halves apart by design).
+* **Zero-rate jobs are inert** (bitwise): appending a job that never
+  issues (zero priority, zero rate, zero volume) changes nothing -- the
+  padding contract ``benchmarks/fleet_sweep.py`` relies on.
+
+One leg re-verifies a bitwise property under ``partition="ost_shard"``
+(any host device count that divides n_ost; the CI matrix forces 2 and 4).
+Hypothesis draws random (profile, seed, policy) triples for the two
+bitwise properties; the fixed-seed parametrized tests below each property
+are their no-hypothesis twins (the ``tests/conftest.py`` shim pattern).
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from conftest import HAVE_HYPOTHESIS, given, settings, st
+
+from repro.core.policies import list_policies
+from repro.storage import FleetConfig, random_fleet, scengen, simulate_fleet
+
+POLICIES = list_policies()
+TELEMETRY = ("trajectory", "streaming")
+TRAJ_FIELDS = ("served", "demand", "alloc", "queue_final")
+#: StreamStats fields indexed [O, J] (compared column-wise in job-axis
+#: transformations; lag_* and util_sum are per-OST aggregates)
+STATS_OJ = ("served_sum", "demand_sum", "alloc_sum", "alloc_windows",
+            "last_served")
+
+W = 10                      # window_ticks used throughout
+BASE = dict(profile="mixed", seed=5, n_ost=4, n_jobs=6, duration_s=3.0)
+
+
+def _scenario_arrays(profile, seed, n_ost, n_jobs, duration_s):
+    scn = random_fleet(seed, n_ost=n_ost, n_jobs=n_jobs, profile=profile,
+                       duration_s=duration_s)
+    return (np.asarray(scn.nodes), np.asarray(scn.issue_rate),
+            np.asarray(scn.volume), np.asarray(scn.capacity_per_tick),
+            np.asarray(scn.max_backlog))
+
+
+@functools.lru_cache(maxsize=None)
+def _base_case():
+    return _scenario_arrays(**BASE)
+
+
+def _run(control, case, telemetry="trajectory", integer_tokens=True,
+         partition="none"):
+    nodes, rates, vol, caps, backlog = case
+    cfg = FleetConfig(control=control, window_ticks=W, telemetry=telemetry,
+                      integer_tokens=integer_tokens, partition=partition)
+    return simulate_fleet(cfg, jnp.asarray(nodes), jnp.asarray(rates),
+                          jnp.asarray(vol), jnp.asarray(caps),
+                          jnp.asarray(backlog))
+
+
+def _assert_traj_equal(got, want, bitwise=True, tag=""):
+    for field in TRAJ_FIELDS:
+        g, w = np.asarray(getattr(got, field)), np.asarray(getattr(want, field))
+        if bitwise:
+            np.testing.assert_array_equal(g, w, err_msg=f"{tag}:{field}")
+        else:
+            np.testing.assert_array_equal(np.isfinite(g), np.isfinite(w),
+                                          err_msg=f"{tag}:{field}")
+            fin = np.isfinite(g)
+            np.testing.assert_allclose(g[fin], w[fin], rtol=1e-4, atol=1e-3,
+                                       err_msg=f"{tag}:{field}")
+
+
+def _assert_stats_equal(got, want, bitwise=True, tag=""):
+    for (pa, a), (pb, b) in zip(
+            jax.tree_util.tree_leaves_with_path(got.stats),
+            jax.tree_util.tree_leaves_with_path(want.stats)):
+        key = jax.tree_util.keystr(pa)
+        a, b = np.asarray(a), np.asarray(b)
+        if bitwise:
+            np.testing.assert_array_equal(a, b, err_msg=f"{tag}:stats{key}")
+        else:
+            np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-2,
+                                       err_msg=f"{tag}:stats{key}")
+
+
+# ------------------------------------------------- 1. OST permutation
+
+
+def _permute_osts(case, perm):
+    nodes, rates, vol, caps, backlog = case
+    return (nodes, rates[:, perm], vol[perm], caps[perm], backlog[perm])
+
+
+def _permute_stats_osts(result, perm):
+    """Apply an OST permutation to every [O, ...] StreamStats leaf."""
+    stats = jax.tree.map(
+        lambda x: x[np.asarray(perm)] if np.ndim(x) >= 1 else x, result.stats)
+    return result._replace(stats=stats,
+                           queue_final=result.queue_final[np.asarray(perm)])
+
+
+def _check_ost_permutation(control, case, telemetry, partition="none"):
+    # a fixed derangement of the O=4 rows (crosses every 2-/4-way device
+    # boundary in the sharded leg)
+    perm = np.array([2, 0, 3, 1])
+    base = _run(control, case, telemetry, partition=partition)
+    permuted = _run(control, _permute_osts(case, perm), telemetry,
+                    partition=partition)
+    tag = f"{control}/{telemetry}/ost_perm"
+    if telemetry == "streaming":
+        want = _permute_stats_osts(base, perm)
+        _assert_stats_equal(permuted, want, bitwise=True, tag=tag)
+        np.testing.assert_array_equal(np.asarray(permuted.queue_final),
+                                      np.asarray(want.queue_final), err_msg=tag)
+    else:
+        for field in ("served", "demand", "alloc"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(permuted, field)),
+                np.asarray(getattr(base, field))[:, perm],
+                err_msg=f"{tag}:{field}")
+        np.testing.assert_array_equal(np.asarray(permuted.queue_final),
+                                      np.asarray(base.queue_final)[perm],
+                                      err_msg=tag)
+
+
+@pytest.mark.parametrize("telemetry", TELEMETRY)
+@pytest.mark.parametrize("control", POLICIES)
+def test_ost_permutation_commutes_bitwise(control, telemetry):
+    """Fixed-seed twin of ``test_property_ost_permutation``."""
+    _check_ost_permutation(control, _base_case(), telemetry)
+
+
+@pytest.mark.parametrize("control", POLICIES)
+def test_ost_permutation_commutes_under_ost_shard(control):
+    """The ost_shard leg: the same bitwise property with the window loop
+    under ``shard_map`` -- a permutation that crosses device boundaries
+    must still commute (and stay bitwise-equal to the unsharded run)."""
+    n_ost = BASE["n_ost"]
+    if n_ost % jax.device_count():
+        pytest.skip(f"{jax.device_count()} devices do not divide "
+                    f"n_ost={n_ost}")
+    case = _base_case()
+    _check_ost_permutation(control, case, "trajectory", partition="ost_shard")
+    sharded = _run(control, case, partition="ost_shard")
+    _assert_traj_equal(sharded, _run(control, case), bitwise=True,
+                       tag=f"{control}/shard_vs_single")
+
+
+# ------------------------------------------------- 2. job permutation
+
+
+def _permute_jobs(case, perm):
+    nodes, rates, vol, caps, backlog = case
+    return (nodes[perm], rates[:, :, perm], vol[:, perm], caps,
+            backlog[:, perm])
+
+
+@pytest.mark.parametrize("telemetry", TELEMETRY)
+@pytest.mark.parametrize("control", POLICIES)
+def test_job_permutation_commutes(control, telemetry):
+    """Tight-allclose, not bitwise: job-axis float reductions reassociate
+    under permutation (sums of permuted f32 values round differently)."""
+    case = _base_case()
+    perm = np.array([3, 0, 5, 1, 4, 2])
+    base = _run(control, case, telemetry)
+    permuted = _run(control, _permute_jobs(case, perm), telemetry)
+    tag = f"{control}/{telemetry}/job_perm"
+    if telemetry == "streaming":
+        for field in STATS_OJ:
+            a = np.asarray(getattr(permuted.stats, field))
+            b = np.asarray(getattr(base.stats, field))[:, perm]
+            if field == "last_served":
+                np.testing.assert_array_equal(a, b, err_msg=f"{tag}:{field}")
+            else:
+                np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-2,
+                                           err_msg=f"{tag}:{field}")
+    else:
+        for field in ("served", "demand", "alloc"):
+            a = np.asarray(getattr(permuted, field))
+            b = np.asarray(getattr(base, field))[:, :, perm]
+            np.testing.assert_array_equal(np.isfinite(a), np.isfinite(b),
+                                          err_msg=f"{tag}:{field}")
+            fin = np.isfinite(a)
+            np.testing.assert_allclose(a[fin], b[fin], rtol=1e-4, atol=1e-3,
+                                       err_msg=f"{tag}:{field}")
+
+
+# ------------------------------------------- 3. uniform priority scaling
+
+
+def _scale_priorities(case, factor):
+    nodes, rates, vol, caps, backlog = case
+    return (nodes * factor, rates, vol, caps, backlog)
+
+
+def _check_priority_scaling(control, case, telemetry, factor):
+    base = _run(control, case, telemetry)
+    scaled = _run(control, _scale_priorities(case, factor), telemetry)
+    tag = f"{control}/{telemetry}/pri_x{factor}"
+    if telemetry == "streaming":
+        _assert_stats_equal(scaled, base, bitwise=True, tag=tag)
+        np.testing.assert_array_equal(np.asarray(scaled.queue_final),
+                                      np.asarray(base.queue_final), err_msg=tag)
+    else:
+        _assert_traj_equal(scaled, base, bitwise=True, tag=tag)
+
+
+@pytest.mark.parametrize("telemetry", TELEMETRY)
+@pytest.mark.parametrize("control", POLICIES)
+def test_priority_scaling_invariant_bitwise(control, telemetry):
+    """Fixed-seed twin of ``test_property_priority_scaling``: every policy
+    consumes priorities only as shares, and x2^k is fp-exact."""
+    _check_priority_scaling(control, _base_case(), telemetry, 4.0)
+
+
+@pytest.mark.parametrize("control", POLICIES)
+def test_priority_scaling_non_power_of_two(control):
+    """Non-power-of-two factors are only share-exact up to fp rounding;
+    the allocations must still agree to tight tolerance."""
+    case = _base_case()
+    base = _run(control, case)
+    scaled = _run(control, _scale_priorities(case, 3.0))
+    _assert_traj_equal(scaled, base, bitwise=False,
+                       tag=f"{control}/pri_x3")
+
+
+# --------------------------------------------- 4. isolated-burst time shift
+
+
+PREROLL_W = 30   # idle windows before the burst: every policy's idle state
+                 # (incl. aimd's additive-increase climb to its cap clip)
+                 # has converged by then
+SHIFT_W = 6
+HORIZON_W = 60
+
+
+def _burst_case(start_window):
+    tr = scengen.bursts(burst_rpcs=600.0, interval_ticks=10**6,
+                        burst_ticks=20, start_tick=start_window * W)
+    jobs = [scengen.JobSpec(trace=tr, nodes=3.0, stripe_count=2),
+            scengen.JobSpec(trace=scengen.constant(0.0), nodes=5.0)]
+    scn = scengen.build_fleet("shift", jobs, n_ost=2, capacity_per_tick=10.0,
+                              duration_s=HORIZON_W * W * 0.01)
+    return (np.asarray(scn.nodes), np.asarray(scn.issue_rate),
+            np.asarray(scn.volume), np.asarray(scn.capacity_per_tick),
+            np.asarray(scn.max_backlog))
+
+
+@pytest.mark.parametrize("telemetry", TELEMETRY)
+@pytest.mark.parametrize("control", POLICIES)
+def test_isolated_burst_time_shift(control, telemetry):
+    early = _run(control, _burst_case(PREROLL_W), telemetry)
+    late = _run(control, _burst_case(PREROLL_W + SHIFT_W), telemetry)
+    tag = f"{control}/{telemetry}/time_shift"
+    if telemetry == "streaming":
+        # the burst is fully absorbed in both runs: totals agree, and the
+        # burst job's last service window moves by exactly the shift
+        np.testing.assert_allclose(
+            np.asarray(late.stats.served_sum), np.asarray(early.stats.served_sum),
+            rtol=1e-5, atol=1e-3, err_msg=tag)
+        early_last = np.asarray(early.stats.last_served).max(axis=0)
+        late_last = np.asarray(late.stats.last_served).max(axis=0)
+        assert late_last[0] - early_last[0] == SHIFT_W, tag
+    else:
+        s_early = np.asarray(early.served)
+        s_late = np.asarray(late.served)
+        n = HORIZON_W - (PREROLL_W + SHIFT_W)
+        np.testing.assert_array_equal(
+            s_late[PREROLL_W + SHIFT_W:][:n], s_early[PREROLL_W:][:n],
+            err_msg=f"{tag}: service did not shift with the burst")
+        assert s_early.sum() > 0, f"{tag}: burst never served"
+        # nothing is served while the system idles before either burst
+        assert s_late[:PREROLL_W + SHIFT_W].sum() == 0.0, tag
+
+
+# ------------------------------------------------------- 5. job splitting
+
+
+def _split_job(case, j):
+    """Replace job ``j`` with two clones at half rate / priority / volume /
+    backlog (the clones land at the end of the job axis)."""
+    nodes, rates, vol, caps, backlog = case
+    half_r = rates[:, :, j:j + 1] * 0.5
+    return (
+        np.concatenate([np.delete(nodes, j), [nodes[j] / 2, nodes[j] / 2]]),
+        np.concatenate([np.delete(rates, j, axis=2), half_r, half_r], axis=2),
+        np.concatenate([np.delete(vol, j, axis=1), vol[:, j:j + 1] * 0.5,
+                        vol[:, j:j + 1] * 0.5], axis=1),
+        caps,
+        np.concatenate([np.delete(backlog, j, axis=1),
+                        backlog[:, j:j + 1] * 0.5,
+                        backlog[:, j:j + 1] * 0.5], axis=1),
+    )
+
+
+def _merge_split_served(served):
+    """[..., J+1] split-run service -> [..., J] with the clones re-merged
+    (as the last column, matching ``np.delete`` + append ordering)."""
+    return np.concatenate(
+        [served[..., :-2], (served[..., -2] + served[..., -1])[..., None]],
+        axis=-1)
+
+
+@pytest.mark.parametrize("telemetry", TELEMETRY)
+@pytest.mark.parametrize("control", POLICIES)
+def test_job_split_conserves_service(control, telemetry):
+    """Float tokens: integerization would round the two halves apart by
+    design (floor(x/2) + floor(x/2) != floor(x)).  The split pair must
+    jointly reproduce the original job tightly; *third-party* jobs get a
+    looser bound -- adaptbf's utilization score divides by
+    ``max(alloc_prev, 1)``, so a neighbor hovering near a 1-token
+    allocation reacts non-linearly to the split's slightly different
+    borrowing pattern (and aimd floors each half-rule at 1 token).  The
+    fleet total is conserved tightest of all."""
+    case = _base_case()
+    j = int(np.argmax(case[1].sum(axis=(0, 1))))   # the busiest job
+    base = _run(control, case, telemetry, integer_tokens=False)
+    split = _run(control, _split_job(case, j), telemetry,
+                 integer_tokens=False)
+    tag = f"{control}/{telemetry}/split"
+    if telemetry == "streaming":
+        got = _merge_split_served(np.asarray(split.stats.served_sum))
+        want = np.concatenate(
+            [np.delete(np.asarray(base.stats.served_sum), j, axis=1),
+             np.asarray(base.stats.served_sum)[:, j:j + 1]], axis=1)
+    else:
+        got = _merge_split_served(np.asarray(split.served)).sum(axis=0)
+        want = np.concatenate(
+            [np.delete(np.asarray(base.served), j, axis=2),
+             np.asarray(base.served)[:, :, j:j + 1]], axis=2).sum(axis=0)
+    np.testing.assert_allclose(got[..., -1], want[..., -1], rtol=2e-2,
+                               atol=2.0, err_msg=f"{tag}: split pair")
+    np.testing.assert_allclose(got[..., :-1], want[..., :-1], rtol=1e-1,
+                               atol=2.0, err_msg=f"{tag}: third-party jobs")
+    np.testing.assert_allclose(got.sum(), want.sum(), rtol=5e-3,
+                               err_msg=f"{tag}: fleet total")
+
+
+# ------------------------------------------------------ 6. zero-rate jobs
+
+
+def _append_zero_job(case):
+    nodes, rates, vol, caps, backlog = case
+    o = caps.shape[0]
+    return (
+        np.concatenate([nodes, [0.0]]).astype(np.float32),
+        np.concatenate([rates, np.zeros((rates.shape[0], o, 1), np.float32)],
+                       axis=2),
+        np.concatenate([vol, np.zeros((o, 1), np.float32)], axis=1),
+        caps,
+        np.concatenate([backlog, np.full((o, 1), 16.0, np.float32)], axis=1),
+    )
+
+
+@pytest.mark.parametrize("telemetry", TELEMETRY)
+@pytest.mark.parametrize("control", POLICIES)
+def test_zero_rate_job_is_inert(control, telemetry):
+    """Appending a job with zero priority / rate / volume changes nothing,
+    bitwise -- the padding contract the vmapped sweep relies on."""
+    case = _base_case()
+    base = _run(control, case, telemetry)
+    padded = _run(control, _append_zero_job(case), telemetry)
+    tag = f"{control}/{telemetry}/zero_job"
+    if telemetry == "streaming":
+        for field in STATS_OJ:
+            a = np.asarray(getattr(padded.stats, field))
+            np.testing.assert_array_equal(
+                a[:, :-1], np.asarray(getattr(base.stats, field)),
+                err_msg=f"{tag}:{field}")
+        assert float(np.abs(np.asarray(padded.stats.served_sum)[:, -1]).max()) == 0.0
+        assert (np.asarray(padded.stats.last_served)[:, -1] == -1).all(), tag
+        np.testing.assert_array_equal(np.asarray(padded.stats.util_sum),
+                                      np.asarray(base.stats.util_sum),
+                                      err_msg=tag)
+    else:
+        for field in ("served", "demand", "alloc"):
+            a = np.asarray(getattr(padded, field))
+            np.testing.assert_array_equal(
+                a[:, :, :-1], np.asarray(getattr(base, field)),
+                err_msg=f"{tag}:{field}")
+        assert float(np.asarray(padded.served)[:, :, -1].sum()) == 0.0, tag
+        np.testing.assert_array_equal(np.asarray(padded.queue_final)[:, :-1],
+                                      np.asarray(base.queue_final),
+                                      err_msg=tag)
+
+
+# --------------------------------------------------------------- hypothesis
+#
+# Random (profile, seed, policy) draws for the two bitwise properties; the
+# fixed-seed parametrized tests above are their no-hypothesis twins.
+
+if HAVE_HYPOTHESIS:
+
+    @st.composite
+    def metamorphic_draw(draw):
+        return (draw(st.sampled_from(sorted(scengen.PROFILES))),
+                draw(st.integers(0, 2**31 - 1)),
+                draw(st.sampled_from(POLICIES)))
+else:  # pragma: no cover - placeholder so the decorators still apply
+
+    def metamorphic_draw():
+        return None
+
+
+def _drawn_case(profile, seed):
+    return _scenario_arrays(profile, seed, n_ost=BASE["n_ost"],
+                            n_jobs=BASE["n_jobs"],
+                            duration_s=BASE["duration_s"])
+
+
+@pytest.mark.property
+@settings(max_examples=10, deadline=None)
+@given(metamorphic_draw())
+def test_property_ost_permutation(case):
+    profile, seed, control = case
+    _check_ost_permutation(control, _drawn_case(profile, seed), "trajectory")
+
+
+@pytest.mark.property
+@settings(max_examples=10, deadline=None)
+@given(metamorphic_draw())
+def test_property_priority_scaling(case):
+    profile, seed, control = case
+    factor = float(2 ** (1 + seed % 4))            # 2, 4, 8, 16
+    _check_priority_scaling(control, _drawn_case(profile, seed),
+                            "trajectory", factor)

@@ -1,0 +1,341 @@
+"""Scenario-generator suite: the trace algebra, the seeded fleet generator,
+the registry ergonomics, and the bitwise pin that holds the refactored
+hand-written builders to their pre-refactor outputs.
+
+The pin: ``tests/data/golden_scenarios.npz`` captures every registered
+scenario's arrays (at default durations) as emitted immediately before
+``workloads.py`` was rebuilt on the ``scengen`` primitives; the rebuilt
+builders must reproduce them bit for bit.
+"""
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.storage import scengen
+from repro.storage.scengen import (
+    JobSpec,
+    Trace,
+    as_trace,
+    build_fleet,
+    bursts,
+    churn_windows,
+    constant,
+    diurnal,
+    onoff,
+    phases,
+    ramp,
+    random_fleet,
+    replay,
+    replay_csv,
+)
+from repro.storage.workloads import (
+    SCENARIOS,
+    FleetScenario,
+    Scenario,
+    get_scenario,
+    list_fleet_scenarios,
+    list_scenarios,
+    register_scenario,
+)
+
+DATA = pathlib.Path(__file__).parent / "data"
+
+#: every scenario that existed before the scengen refactor (the golden
+#: capture predates the fleet_gen_* registrations)
+PINNED = (
+    "allocation_ivd", "redistribution_ive", "recompensation_ivf",
+    "fleet_noisy_neighbor", "fleet_ost_imbalance", "fleet_burst_storm",
+    "fleet_churn",
+)
+
+
+# ------------------------------------------------- pre-refactor bitwise pin
+
+
+@pytest.mark.parametrize("name", PINNED)
+def test_builders_bitwise_match_prerefactor_golden(name):
+    golden = np.load(DATA / "golden_scenarios.npz")
+    scn = get_scenario(name)   # defaults == capture settings
+    fields = ["nodes", "issue_rate", "volume", "max_backlog"]
+    if isinstance(scn, FleetScenario):
+        fields.append("capacity_per_tick")
+    for field in fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(scn, field)), golden[f"{name}/{field}"],
+            err_msg=f"{name}/{field} drifted from the pre-refactor builder")
+
+
+# ------------------------------------------------------------ trace algebra
+
+
+def test_constant_and_shift():
+    tr = constant(5.0)
+    np.testing.assert_array_equal(tr(4), np.full(4, 5.0, np.float32))
+    out = tr.shift(2)(5)
+    np.testing.assert_array_equal(out, [0, 0, 5, 5, 5])
+    # shift past the horizon is all-zero, shift(0) is the identity
+    np.testing.assert_array_equal(tr.shift(9)(4), np.zeros(4))
+    assert tr.shift(0) is tr
+    with pytest.raises(ValueError, match="non-negative"):
+        tr.shift(-1)
+
+
+def test_between_masks_activity_window():
+    out = constant(3.0).between(1, 3)(5)
+    np.testing.assert_array_equal(out, [0, 3, 3, 0, 0])
+    np.testing.assert_array_equal(constant(3.0).between(2, None)(4),
+                                  [0, 0, 3, 3])
+
+
+def test_phases_segments_and_trailing_hold():
+    tr = phases((2, 1.0), (3, 4.0), (None, 2.0))
+    np.testing.assert_array_equal(tr(8), [1, 1, 4, 4, 4, 2, 2, 2])
+    # trailing time past the listed segments holds the last rate
+    np.testing.assert_array_equal(phases((2, 1.0), (2, 5.0))(6),
+                                  [1, 1, 5, 5, 5, 5])
+    with pytest.raises(ValueError, match="at least one"):
+        phases()
+    # a mid-list open-ended segment would silently swallow the rest
+    with pytest.raises(ValueError, match="final"):
+        phases((None, 1.0), (100, 9.0))
+
+
+def test_ramp_endpoints():
+    out = ramp(0.0, 10.0, start_tick=2, end_tick=7)(10)
+    np.testing.assert_array_equal(out[:2], [0, 0])
+    np.testing.assert_array_equal(out[7:], [10, 10, 10])
+    assert (np.diff(out[2:8]) > 0).all()
+
+
+def _periodic_bursts_prerefactor(t_ticks, burst_rpcs, interval_ticks,
+                                 burst_ticks=2, start_tick=0):
+    """Frozen copy of the pre-refactor workloads.periodic_bursts loop."""
+    out = np.zeros(t_ticks, np.float32)
+    per_tick = burst_rpcs / burst_ticks
+    for t0 in range(start_tick, t_ticks, interval_ticks):
+        out[t0: t0 + burst_ticks] += per_tick
+    return out
+
+
+@pytest.mark.parametrize("kw", [
+    dict(burst_rpcs=300, interval_ticks=50, burst_ticks=2, start_tick=0),
+    dict(burst_rpcs=421, interval_ticks=37, burst_ticks=5, start_tick=11),
+    dict(burst_rpcs=15, interval_ticks=300, burst_ticks=1, start_tick=299),
+])
+def test_bursts_bitwise_matches_frozen_loop(kw):
+    np.testing.assert_array_equal(
+        bursts(**kw)(700), _periodic_bursts_prerefactor(700, **kw))
+
+
+def test_onoff_duty_cycle_and_determinism():
+    tr = onoff(rate=8.0, p_on=0.02, p_off=0.06, seed=7)
+    a, b = tr(20000), tr(20000)
+    np.testing.assert_array_equal(a, b)          # same seed, same trace
+    assert set(np.unique(a)) <= {0.0, 8.0}
+    duty = (a > 0).mean()
+    assert abs(duty - 0.25) < 0.08               # stationary duty p_on/(p_on+p_off)
+    assert not np.array_equal(a, onoff(8.0, 0.02, 0.06, seed=8)(20000))
+    with pytest.raises(ValueError, match="p_on/p_off"):
+        onoff(1.0, 0.0, 0.5, seed=0)
+
+
+def test_diurnal_cycle():
+    out = diurnal(mean=10.0, swing=15.0, period_ticks=100)(400)
+    assert (out >= 0).all()                      # floored at zero
+    assert out.max() > 20.0
+    np.testing.assert_allclose(out[:100], out[100:200], atol=1e-4)
+
+
+def test_replay_tile_pad_truncate():
+    np.testing.assert_array_equal(replay([1, 2, 3])(7), [1, 2, 3, 1, 2, 3, 1])
+    np.testing.assert_array_equal(replay([1, 2, 3], tile=False)(5),
+                                  [1, 2, 3, 0, 0])
+    np.testing.assert_array_equal(replay([1, 2, 3], scale=2.0)(2), [2, 4])
+    with pytest.raises(ValueError, match="non-empty"):
+        replay([])
+
+
+def test_replay_csv(tmp_path):
+    p = tmp_path / "trace.csv"
+    p.write_text("t,rate\n0,5.0\n1,7.5\n2,0.0\n")
+    np.testing.assert_array_equal(
+        replay_csv(p, column=1, skip_header=1)(4), [5.0, 7.5, 0.0, 5.0])
+    bad = tmp_path / "bad.csv"
+    bad.write_text("a\nb\n")
+    with pytest.raises(ValueError, match="non-numeric"):
+        replay_csv(bad)
+
+
+def test_composition_sum_scale_clip():
+    tr = constant(2.0) + bursts(10, interval_ticks=4, burst_ticks=1)
+    np.testing.assert_array_equal(tr(4), [12, 2, 2, 2])
+    np.testing.assert_array_equal((tr * 2.0)(4), [24, 4, 4, 4])
+    np.testing.assert_array_equal((0.5 * tr)(4), [6, 1, 1, 1])
+    total = sum([constant(1.0), constant(2.0), constant(3.0)])
+    np.testing.assert_array_equal(total(3), [6, 6, 6])
+    np.testing.assert_array_equal(tr.clip(hi=5.0)(4), [5, 2, 2, 2])
+    # scalars and arrays coerce
+    np.testing.assert_array_equal(as_trace(4.0)(2), [4, 4])
+    np.testing.assert_array_equal(as_trace([1.0, 2.0])(2), [1, 2])
+    # ndarray + Trace composes as replay + Trace (numpy must not broadcast
+    # the Trace element-wise into an object array)
+    summed = np.array([1.0, 2.0], np.float32) + constant(3.0)
+    assert isinstance(summed, Trace)
+    np.testing.assert_array_equal(summed(4), [4, 5, 4, 5])
+
+
+def test_trace_shape_and_horizon_guards():
+    with pytest.raises(ValueError, match="positive"):
+        constant(1.0)(0)
+    with pytest.raises(ValueError, match="expected"):
+        Trace(lambda t: np.zeros(t + 1, np.float32))(4)
+
+
+# ------------------------------------------------------------ churn process
+
+
+def test_churn_windows_shape_and_determinism():
+    w = churn_windows(5, n_jobs=64, t_ticks=1000)
+    assert w.shape == (64, 2)
+    assert (w[:, 0] >= 0).all() and (w[:, 1] <= 1000).all()
+    np.testing.assert_array_equal(w, churn_windows(5, 64, 1000))
+    # some jobs start at t=0, and churn actually happens inside the horizon
+    assert (w[:, 0] == 0).any()
+    assert ((w[:, 0] > 0) & (w[:, 0] < 1000)).any()
+    assert (w[:, 1] < 1000).any()
+
+
+# -------------------------------------------------------------- fleet build
+
+
+def test_build_fleet_routes_and_conserves_demand():
+    jobs = [
+        JobSpec(trace=constant(10.0), nodes=8, stripe_count=2),
+        JobSpec(trace=bursts(100, 50), nodes=32, volume=500.0),
+        JobSpec(trace=constant(4.0), nodes=4, stripe_count=1,
+                max_backlog=64.0),
+    ]
+    scn = build_fleet("t", jobs, n_ost=4, capacity_per_tick=20.0,
+                      duration_s=2.0)
+    assert isinstance(scn, FleetScenario)
+    assert scn.issue_rate.shape == (200, 4, 3)
+    assert scn.n_ost == 4
+    # striping conserves each job's (volume-clipped) demand over targets
+    routed = scn.issue_rate.sum(axis=1)            # [T, J]
+    job_level = np.stack([j.trace(200) for j in jobs], axis=1)
+    clipped = striping_clip(job_level, [j.volume for j in jobs])
+    np.testing.assert_allclose(routed, clipped, atol=1e-4)
+    with pytest.raises(ValueError, match="at least one"):
+        build_fleet("t", [], n_ost=4)
+    # stripe_count is a round_robin knob; dropping it silently under
+    # another policy would build a scenario the user did not ask for
+    with pytest.raises(ValueError, match="stripe_count"):
+        build_fleet("t", [JobSpec(trace=constant(1.0), nodes=1,
+                                  stripe_count=2)],
+                    n_ost=4, policy="progressive")
+
+
+def striping_clip(issue, volume):
+    from repro.storage.striping import _clip_to_volume
+    return _clip_to_volume(issue, np.asarray(volume, np.float32))
+
+
+# ---------------------------------------------------------- random fleets
+
+
+@pytest.mark.parametrize("profile", sorted(scengen.PROFILES))
+def test_random_fleet_deterministic_and_well_formed(profile):
+    a = random_fleet(11, n_ost=4, n_jobs=6, profile=profile, duration_s=2.0)
+    b = random_fleet(11, n_ost=4, n_jobs=6, profile=profile, duration_s=2.0)
+    for f in ("nodes", "issue_rate", "volume", "max_backlog",
+              "capacity_per_tick"):
+        np.testing.assert_array_equal(np.asarray(getattr(a, f)),
+                                      np.asarray(getattr(b, f)),
+                                      err_msg=f"{profile}/{f} nondeterministic")
+    assert a.issue_rate.shape == (200, 4, 6)
+    assert a.issue_rate.min() >= 0
+    assert a.issue_rate.sum() > 0
+    assert (a.nodes > 0).all()
+    assert (a.capacity_per_tick > 0).all()
+    assert a.name == f"fleet_gen_{profile}[s11]"
+    # a different seed draws a different workload
+    c = random_fleet(12, n_ost=4, n_jobs=6, profile=profile, duration_s=2.0)
+    assert not np.array_equal(a.issue_rate, c.issue_rate)
+
+
+def test_random_fleet_profiles_do_not_share_draws():
+    a = random_fleet(3, n_ost=4, n_jobs=6, profile="noisy", duration_s=2.0)
+    b = random_fleet(3, n_ost=4, n_jobs=6, profile="churn", duration_s=2.0)
+    assert not np.array_equal(a.issue_rate, b.issue_rate)
+
+
+def test_random_fleet_saturation_oversubscribes():
+    scn = random_fleet(0, n_ost=8, n_jobs=12, profile="saturation",
+                       duration_s=4.0)
+    demand_per_tick = scn.issue_rate.sum(axis=(1, 2)).mean()
+    assert demand_per_tick > 1.2 * scn.capacity_per_tick.sum()
+
+
+def test_random_fleet_rejects_bad_args():
+    with pytest.raises(ValueError, match="unknown profile"):
+        random_fleet(0, profile="nope")
+    with pytest.raises(ValueError, match="n_ost"):
+        random_fleet(0, n_ost=0)
+
+
+# ------------------------------------------------------ registry ergonomics
+
+
+def test_get_scenario_rejects_unknown_kwargs_naming_signature():
+    with pytest.raises(ValueError) as ei:
+        get_scenario("fleet_churn", not_a_kwarg=1)
+    msg = str(ei.value)
+    assert "not_a_kwarg" in msg
+    assert "fleet_churn(" in msg          # the builder's signature is named
+    assert "duration_s" in msg
+    # positional over-supply is caught the same way
+    with pytest.raises(ValueError, match="bad arguments"):
+        get_scenario("allocation_ivd", duration_s=5.0, bogus=2)
+
+
+def test_get_scenario_unknown_name():
+    with pytest.raises(ValueError, match="unknown scenario"):
+        get_scenario("nope")
+
+
+def test_list_fleet_scenarios_keys_off_return_type_not_name():
+    try:
+        @register_scenario("oddly_named_fleet_builder")
+        def _fleet(duration_s: float = 1.0, n_ost: int = 2) -> FleetScenario:
+            return get_scenario("fleet_churn", duration_s=duration_s,
+                                n_ost=n_ost)
+
+        @register_scenario("fleet_prefixed_but_single")
+        def _single(duration_s: float = 1.0) -> Scenario:
+            return get_scenario("allocation_ivd", duration_s=duration_s)
+
+        fleet = list_fleet_scenarios()
+        assert "oddly_named_fleet_builder" in fleet      # type wins ...
+        assert "fleet_prefixed_but_single" not in fleet  # ... not the name
+        assert "fleet_prefixed_but_single" in list_scenarios()
+    finally:
+        SCENARIOS.pop("oddly_named_fleet_builder", None)
+        SCENARIOS.pop("fleet_prefixed_but_single", None)
+
+
+def test_register_scenario_requires_return_annotation():
+    with pytest.raises(ValueError, match="annotate"):
+        @register_scenario("unannotated")
+        def _bad(duration_s: float = 1.0):
+            return None
+    assert "unannotated" not in SCENARIOS
+
+
+def test_generated_scenarios_registered_and_parameterizable():
+    for profile in sorted(scengen.PROFILES):
+        name = f"fleet_gen_{profile}"
+        assert name in list_fleet_scenarios()
+        scn = get_scenario(name, seed=2, n_ost=4, n_jobs=5, duration_s=1.0)
+        assert isinstance(scn, FleetScenario)
+        assert scn.issue_rate.shape == (100, 4, 5)
