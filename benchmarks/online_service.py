@@ -1,0 +1,134 @@
+"""Online-service smoke benchmark: the long-lived ``FleetService`` loop
+against its offline oracle, with a crash in the middle.
+
+Drives a registered fleet scenario window by window through
+``FleetService.step`` (the production online path: one jitted, donated-carry
+``window_step`` per observation window), checkpoints the full carry at the
+midpoint, *discards the service*, restores into a fresh one, finishes the
+horizon -- and asserts the stitched online run equals one offline
+``simulate_fleet`` scan of the same trace **bitwise**.  That is the
+deployment story of DESIGN.md section 10 exercised end to end: step
+incrementally for days, crash, resume exactly.
+
+The CI bench-smoke job runs ``--smoke`` (a short horizon of the
+``fleet_noisy_neighbor`` scenario) and asserts the JSON report says
+``bitwise_match: true`` for both telemetry modes.
+
+Run:  PYTHONPATH=src python benchmarks/online_service.py \
+          [--scenario fleet_noisy_neighbor] [--duration-s 20] \
+          [--policy adaptbf] [--smoke] [--out report.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from repro.storage import FleetConfig, FleetService, get_scenario, simulate_fleet
+
+
+def run_mode(scn, policy: str, telemetry: str, ckpt_dir: str) -> dict:
+    cfg = FleetConfig(control=policy, telemetry=telemetry)
+    wt = cfg.window_ticks
+    n_windows = scn.issue_rate.shape[0] // wt
+    half = n_windows // 2
+    rates = scn.issue_rate[: n_windows * wt]
+
+    offline = simulate_fleet(cfg, scn.nodes, rates, scn.volume,
+                             scn.capacity_per_tick, scn.max_backlog)
+    offline = jax.tree.map(np.asarray, offline)
+
+    def make_service():
+        return FleetService(cfg, scn.nodes, scn.volume,
+                            scn.capacity_per_tick, scn.max_backlog,
+                            checkpoint_dir=ckpt_dir)
+
+    svc = make_service()
+    outs = []
+    t0 = time.perf_counter()
+    for w in range(half):
+        outs.append(svc.step(rates[w * wt:(w + 1) * wt]))
+    svc.save()
+    del svc                                   # the "crash"
+
+    svc = make_service()
+    restored_step = svc.restore()
+    for w in range(half, n_windows):
+        outs.append(svc.step(rates[w * wt:(w + 1) * wt]))
+    jax.block_until_ready(svc.carry)
+    wall = time.perf_counter() - t0
+
+    if telemetry == "trajectory":
+        online_leaves = [np.stack([np.asarray(o[i]) for o in outs])
+                         for i in range(4)] + [np.asarray(svc.queue)]
+        offline_leaves = [offline.served, offline.demand, offline.alloc,
+                          offline.record, offline.queue_final]
+    else:
+        online_leaves = [np.asarray(x) for x in jax.tree.leaves(svc.stats)]
+        online_leaves.append(np.asarray(svc.queue))
+        offline_leaves = list(jax.tree.leaves(offline.stats))
+        offline_leaves.append(offline.queue_final)
+    match = all(np.array_equal(a, b)
+                for a, b in zip(offline_leaves, online_leaves)) \
+        and len(offline_leaves) == len(online_leaves)
+
+    return {
+        "telemetry": telemetry,
+        "windows": n_windows,
+        "restored_at_window": restored_step,
+        "bitwise_match": bool(match),
+        "wall_s": wall,
+        "windows_per_s": n_windows / wall,
+    }
+
+
+def run(scenario: str, duration_s: float, policy: str) -> dict:
+    scn = get_scenario(scenario, duration_s=duration_s)
+    ckpt_root = tempfile.mkdtemp(prefix="online_service_bench_")
+    try:
+        modes = [run_mode(scn, policy, t, f"{ckpt_root}/{t}")
+                 for t in ("trajectory", "streaming")]
+    finally:
+        shutil.rmtree(ckpt_root, ignore_errors=True)
+    return {
+        "scenario": scenario,
+        "policy": policy,
+        "o": scn.n_ost,
+        "j": scn.nodes.shape[0],
+        "modes": modes,
+        "all_bitwise": all(m["bitwise_match"] for m in modes),
+        "provenance": {
+            "jax_version": jax.__version__,
+            "jax_backend": jax.default_backend(),
+        },
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=None, help="also write the JSON here")
+    ap.add_argument("--scenario", default="fleet_noisy_neighbor")
+    ap.add_argument("--duration-s", type=float, default=20.0)
+    ap.add_argument("--policy", default="adaptbf")
+    ap.add_argument("--smoke", action="store_true",
+                    help="short horizon for CI (duration-s=4)")
+    args = ap.parse_args()
+    if args.smoke:
+        args.duration_s = min(args.duration_s, 4.0)
+    report = run(args.scenario, args.duration_s, args.policy)
+    text = json.dumps(report, indent=2, default=float)
+    print(text)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+    if not report["all_bitwise"]:
+        raise SystemExit("online run diverged from the offline oracle")
+
+
+if __name__ == "__main__":
+    main()

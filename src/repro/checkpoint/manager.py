@@ -13,14 +13,47 @@ runs (elastic scaling) is a pure restore-time decision.
 from __future__ import annotations
 
 import json
+import logging
 import os
 import queue
+import re
 import shutil
 import threading
 from typing import Any, Optional
 
 import jax
 import numpy as np
+
+logger = logging.getLogger(__name__)
+
+#: Committed checkpoints are exactly ``step_<8 digits>``; anything else in
+#: the directory (``.tmp`` staging dirs, editor droppings, user files) is
+#: not a checkpoint and must never crash enumeration.
+_STEP_RE = re.compile(r"step_(\d+)$")
+
+
+def _list_steps(directory: str) -> list:
+    """Sorted ``(step, dirname)`` of committed checkpoints under
+    ``directory``.  Non-matching entries -- ``.tmp`` staging dirs, stray
+    files, unparsable names -- are ignored, not errors, and removal /
+    restore always act on the *listed* dirname (never a re-derived one, so
+    an unpadded ``step_123`` still round-trips)."""
+    if not os.path.isdir(directory):
+        return []
+    steps = []
+    for d in os.listdir(directory):
+        m = _STEP_RE.fullmatch(d)
+        if m and os.path.isdir(os.path.join(directory, d)):
+            steps.append((int(m.group(1)), d))
+    return sorted(steps)
+
+
+def _step_dir(directory: str, step: int) -> Optional[str]:
+    """Absolute path of the committed checkpoint for ``step``, or None."""
+    for s, d in _list_steps(directory):
+        if s == step:
+            return os.path.join(directory, d)
+    return None
 
 
 def _leaves_with_paths(tree):
@@ -56,22 +89,31 @@ def save_checkpoint(directory: str, state: Any, step: int,
 
 
 def latest_step(directory: str) -> Optional[int]:
-    if not os.path.isdir(directory):
-        return None
-    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
-             if d.startswith("step_") and not d.endswith(".tmp")]
-    return max(steps) if steps else None
+    steps = _list_steps(directory)
+    return steps[-1][0] if steps else None
 
 
 def restore_checkpoint(directory: str, like: Any, step: Optional[int] = None,
                        shardings: Any = None) -> tuple[Any, int]:
     """Restore into the structure of ``like``.  ``shardings`` (same pytree
     structure, or None) places every leaf on the *current* mesh -- this is
-    the elastic-rescale path: the checkpoint is mesh-agnostic."""
+    the elastic-rescale path: the checkpoint is mesh-agnostic.
+
+    Raises ``FileNotFoundError`` when no (matching) checkpoint exists and
+    ``ValueError`` on a structure mismatch between the checkpoint and
+    ``like`` (missing leaf path or wrong shape) -- real control-flow
+    exceptions callers can catch, never ``assert`` (which ``python -O``
+    strips, silently turning a corrupt restore into garbage state).
+    """
     if step is None:
         step = latest_step(directory)
-        assert step is not None, f"no checkpoint under {directory}"
-    d = os.path.join(directory, f"step_{step:08d}")
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {directory}")
+    d = _step_dir(directory, step)
+    if d is None:
+        raise FileNotFoundError(
+            f"no checkpoint for step {step} under {directory} "
+            f"(have steps {[s for s, _ in _list_steps(directory)]})")
     with open(os.path.join(d, "meta.json")) as f:
         meta = json.load(f)
     by_path = {m["path"]: m for m in meta["leaves"]}
@@ -81,9 +123,17 @@ def restore_checkpoint(directory: str, like: Any, step: Optional[int] = None,
         shardings, is_leaf=lambda x: isinstance(x, jax.sharding.Sharding))
         if shardings is not None else [None] * len(named))
     for (path, leaf), sh in zip(named, sh_leaves):
-        m = by_path[path]
+        m = by_path.get(path)
+        if m is None:
+            raise ValueError(
+                f"checkpoint {d} has no leaf for pytree path {path!r} -- "
+                "the saved structure does not match `like` (was a carry "
+                "field renamed since the save?)")
         arr = np.load(os.path.join(d, m["file"]))
-        assert list(arr.shape) == list(leaf.shape), (path, arr.shape, leaf.shape)
+        if list(arr.shape) != list(leaf.shape):
+            raise ValueError(
+                f"checkpoint leaf {path!r} has shape {list(arr.shape)} but "
+                f"`like` expects {list(leaf.shape)} (checkpoint {d})")
         if sh is not None:
             out.append(jax.device_put(arr.astype(leaf.dtype), sh))
         else:
@@ -92,28 +142,36 @@ def restore_checkpoint(directory: str, like: Any, step: Optional[int] = None,
 
 
 def gc_checkpoints(directory: str, keep: int = 3):
-    if not os.path.isdir(directory):
-        return
-    steps = sorted(int(d.split("_")[1]) for d in os.listdir(directory)
-                   if d.startswith("step_") and not d.endswith(".tmp"))
-    for s in steps[:-keep]:
-        shutil.rmtree(os.path.join(directory, f"step_{s:08d}"),
-                      ignore_errors=True)
+    steps = _list_steps(directory)
+    # not steps[:-keep]: for keep=0 that is the empty slice, keeping all
+    for _, d in steps[:len(steps) - keep]:
+        shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
 
 
 class AsyncCheckpointer:
     """Background-thread checkpointing so the train loop never blocks on
     storage; at most one write in flight, newer requests supersede queued
-    ones (straggler-proof)."""
+    ones (straggler-proof).
+
+    "Supersede" means exactly that: when a save is already in flight AND
+    one is queued behind it, ``submit`` drops the *queued* (older) state
+    and enqueues the new one -- the freshest state always wins.  A failed
+    save is logged and recorded in ``self.errors``; the worker survives,
+    so one bad write (full disk, transient I/O error) cannot silently
+    disable every later checkpoint for the rest of the run.
+    """
 
     def __init__(self, directory: str, controller=None, keep: int = 3):
         self.directory = directory
         self.controller = controller
         self.keep = keep
         self._q: "queue.Queue" = queue.Queue(maxsize=1)
+        self._submit_lock = threading.Lock()
+        self._closed = False
         self._thread = threading.Thread(target=self._worker, daemon=True)
         self._thread.start()
         self.saved_steps = []
+        self.errors = []       # [(step, exception)] of failed saves
 
     def _worker(self):
         while True:
@@ -121,17 +179,43 @@ class AsyncCheckpointer:
             if item is None:
                 return
             state, step = item
-            save_checkpoint(self.directory, state, step, self.controller)
-            gc_checkpoints(self.directory, self.keep)
+            try:
+                save_checkpoint(self.directory, state, step, self.controller)
+                gc_checkpoints(self.directory, self.keep)
+            except Exception as e:  # noqa: BLE001 -- the worker must survive
+                logger.exception(
+                    "async checkpoint of step %d failed; worker continues",
+                    step)
+                self.errors.append((step, e))
+                continue
             self.saved_steps.append(step)
 
     def submit(self, state, step: int):
-        state = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), state)
-        try:
-            self._q.put_nowait((state, step))
-        except queue.Full:
-            pass  # a save is in flight; skip (next interval will catch up)
+        """Snapshot ``state`` host-side and queue it for a background save;
+        never blocks.  If an older snapshot is still waiting behind an
+        in-flight save, it is replaced by this one."""
+        # np.array, not np.asarray: for host-resident leaves device_get is
+        # a no-op and asarray would alias -- caller mutations after submit
+        # would leak into the checkpoint
+        state = jax.tree.map(lambda x: np.array(jax.device_get(x)), state)
+        with self._submit_lock:
+            if self._closed:
+                raise RuntimeError("submit after close()")
+            while True:
+                try:
+                    self._q.put_nowait((state, step))
+                    return
+                except queue.Full:
+                    # drop the stale queued snapshot (NOT the new one) and
+                    # retry; if the worker grabbed it first the queue is
+                    # simply empty and the put succeeds next iteration
+                    try:
+                        self._q.get_nowait()
+                    except queue.Empty:
+                        pass
 
     def close(self):
-        self._q.put(None)
+        with self._submit_lock:
+            self._closed = True
+            self._q.put(None)
         self._thread.join(timeout=60)

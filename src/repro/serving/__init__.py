@@ -1,4 +1,4 @@
 """Serving substrate: continuous batching + AdapTBF admission."""
-from repro.serving.engine import Request, ServingEngine
+from repro.serving.engine import BOS_TOKEN, Request, ServingEngine
 
-__all__ = ["Request", "ServingEngine"]
+__all__ = ["BOS_TOKEN", "Request", "ServingEngine"]

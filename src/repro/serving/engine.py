@@ -27,6 +27,11 @@ from repro.models.common import ModelConfig
 
 _ids = itertools.count()
 
+#: Seed token for empty-prompt requests: generation starts from BOS rather
+#: than crashing on ``prompt[0]`` (token 0 is the conventional BOS/pad id
+#: across the bundled configs).
+BOS_TOKEN = 0
+
 
 @dataclasses.dataclass
 class Request:
@@ -76,14 +81,23 @@ class ServingEngine:
     # ------------------------------------------------------------ queueing
 
     def submit(self, req: Request):
+        if req.max_new_tokens < 1 and not req.prompt:
+            raise ValueError(
+                "a request with an empty prompt must generate at least one "
+                f"token (max_new_tokens={req.max_new_tokens})")
         self.queues[req.klass].append(req)
 
     def _admit(self):
         for klass, q in self.queues.items():
             while q and None in self.active:
                 if self.controller is not None:
+                    # the stable request id makes a retried head-of-queue
+                    # request count its demand once per window, not once
+                    # per engine step (AdapTBFController.try_consume)
                     ok = self.controller.try_consume(
-                        f"serve:{klass}", q[0].max_new_tokens + len(q[0].prompt))
+                        f"serve:{klass}",
+                        q[0].max_new_tokens + len(q[0].prompt),
+                        request_id=q[0].id)
                     if not ok:
                         break  # class out of budget this window
                 slot = self.active.index(None)
@@ -91,7 +105,9 @@ class ServingEngine:
                 self.active[slot] = req
                 self._consumed[slot] = 0
                 self.pos[slot] = 0
-                self._next_token[slot] = req.prompt[0]
+                # empty prompt -> generate from BOS (no prefill phase)
+                self._next_token[slot] = (req.prompt[0] if req.prompt
+                                          else BOS_TOKEN)
 
     # ------------------------------------------------------------ stepping
 

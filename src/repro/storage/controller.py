@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import threading
 import time
-from typing import Callable, Dict, Optional
+from typing import Callable, Dict, Optional, Set, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -53,6 +53,11 @@ class AdapTBFController:
         self._state = init_fleet_state(n_targets, max_jobs)
         self._demand = np.zeros((n_targets, max_jobs), np.float32)
         self._consumed = np.zeros((n_targets, max_jobs), np.float32)
+        # denied requests whose demand is already counted this window:
+        # a caller that retries a blocked request every engine step must
+        # register its demand ONCE per window, not once per retry --
+        # otherwise the allocator over-grants on phantom demand
+        self._denied: Set[Tuple[int, int, object]] = set()
         # fallback semantics: unruled jobs are unlimited until first window
         self._budget = np.full((n_targets, max_jobs), np.inf, np.float32)
         self._window_end = self._time() + window_s
@@ -99,6 +104,7 @@ class AdapTBFController:
         self._budget = np.where(alloc > 0, alloc, np.inf)
         self._demand[:] = 0.0
         self._consumed[:] = 0.0
+        self._denied.clear()
         self._window_end = self._time() + self.window_s
         self.windows_run += 1
 
@@ -110,7 +116,14 @@ class AdapTBFController:
         """Meter ``nbytes`` of I/O for ``job``; blocks (sleeps) until budget
         admits it.  Striping: chunks round-robin over the job's stripe set
         (deterministic, like the simulator's round_robin policy) unless an
-        explicit ``target`` pins them."""
+        explicit ``target`` pins them.
+
+        Blocked demand survives window rolls: ``_roll_window`` zeroes the
+        demand matrix, so a waiter that observes a roll re-registers its
+        pending tokens -- the queue-aware demand signal (DESIGN.md section
+        3) must keep seeing the deficit that is throttling the job, or the
+        allocator never grants the starved job its boost.
+        """
         idx = self._jobs[job]
         tokens = max(1, int(np.ceil(nbytes / RPC_BYTES)))
         with self._lock:
@@ -122,27 +135,57 @@ class AdapTBFController:
                 t = target % self.n_targets
             self._maybe_roll()
             self._demand[t, idx] += tokens
+            seen_window = self.windows_run
         # wait loop sleeps OUTSIDE the lock: one throttled job must not stall
         # other jobs' metering (their budgets are independent token buckets)
         while True:
             with self._lock:
                 self._maybe_roll()
+                if self.windows_run != seen_window:
+                    # a roll wiped the demand we registered while we slept;
+                    # the tokens are still pending, so they are still demand
+                    self._demand[t, idx] += tokens
+                    seen_window = self.windows_run
                 if self._consumed[t, idx] + tokens <= self._budget[t, idx]:
                     self._consumed[t, idx] += tokens
                     return t
                 wait = max(self._window_end - self._time(), 1e-4)
             self._sleep(wait)
 
-    def try_consume(self, job: str, tokens: float, target: int = 0) -> bool:
-        """Non-blocking budget check-and-consume (serving admission)."""
+    def try_consume(self, job: str, tokens: float, target: int = 0,
+                    request_id=None) -> bool:
+        """Non-blocking budget check-and-consume (serving admission).
+
+        A denied request's demand is counted ONCE per window however many
+        times the caller retries it: callers that poll admission every
+        engine step (``ServingEngine._admit``) pass a stable
+        ``request_id`` so each retry is recognized; anonymous callers
+        (``request_id=None``) are deduplicated per (job, target, tokens),
+        which collapses the same retried request but also same-sized
+        distinct ones -- pass an id when that distinction matters.
+        """
         idx = self._jobs[job]
         with self._lock:
             self._maybe_roll()
-            self._demand[target, idx] += tokens
             if self._consumed[target, idx] + tokens > self._budget[target, idx]:
+                key = (target, idx,
+                       request_id if request_id is not None
+                       else ("anon", float(tokens)))
+                if key not in self._denied:
+                    self._denied.add(key)
+                    self._demand[target, idx] += tokens
                 return False
+            self._demand[target, idx] += tokens
             self._consumed[target, idx] += tokens
             return True
+
+    def observed_demand(self, job: str) -> np.ndarray:
+        """Per-target demand registered for ``job`` in the current window
+        (what the next allocation will see as d_x)."""
+        idx = self._jobs[job]
+        with self._lock:
+            self._maybe_roll()
+            return self._demand[:, idx].copy()
 
     def budget_of(self, job: str) -> np.ndarray:
         """Current per-target window budget for a job (inf = fallback)."""

@@ -1,0 +1,267 @@
+"""Online serving mode: a long-lived windowed controller over the fleet
+engine, with checkpoint/restore of the full carry.
+
+Everything else in ``storage/`` is *offline*: build a full ``[T, O, J]``
+trace, run one ``lax.scan``, read the metrics.  Production control is
+*online* -- rate observations arrive every 100 ms window and the controller
+must step incrementally, for days, and survive restarts (the long-running
+feedback-service framing of SDN storage QoS, arXiv:1805.06169, and the
+control-theory throttler, arXiv:2511.16177).
+
+``FleetService`` is that loop.  It ingests one window of rate observations
+at a time and advances the *same* ``window_step`` the offline scan uses
+(``storage/simulator.py``) under a donated-carry jit, so:
+
+* the disciplines cannot drift -- streaming N windows through
+  ``FleetService.step`` is **bitwise identical** to one offline
+  ``simulate_fleet`` scan of the concatenated trace, for every registered
+  policy and both telemetry modes (``tests/test_service.py``);
+* the horizon is unbounded -- there is no trace array to outgrow, and with
+  ``telemetry="streaming"`` the resident state is the ~[O, J] carry;
+* crash recovery is exact -- ``save()`` checkpoints the complete
+  ``WindowCarry`` (queues, volumes, policy state, allocation, StreamStats)
+  through ``repro/checkpoint``; ``restore()`` resumes bitwise from any
+  saved window (save -> kill -> restore == the uninterrupted run).
+
+The carry's pytree *paths* are the checkpoint naming contract: leaves are
+saved keyed by ``jax.tree_util.keystr`` paths (``.queue``,
+``.stats.served_sum``, ...), so the ``WindowCarry``/``StreamStats`` field
+names must stay stable across versions
+(``telemetry.stream_stats_leaf_paths``, DESIGN.md section 10).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.policies import PolicyContext
+from repro.storage import telemetry
+from repro.storage.simulator import (
+    FleetConfig,
+    FleetResult,
+    StreamResult,
+    WindowCarry,
+    WindowOut,
+    _resolve_policy,
+    init_carry,
+    window_step,
+)
+
+
+class FleetService:
+    """A long-lived fleet controller stepped one observation window at a
+    time.
+
+    Args:
+      cfg: FleetConfig.  ``partition`` must be ``"none"`` -- the online
+        loop is a host-driven single-process service (shard the offline
+        engine instead for batch sweeps).
+      nodes: [J] or [O, J] compute nodes per job (priorities).
+      volume: [O, J] total RPCs per job per target (inf = unbounded).
+      capacity_per_tick: optional [O] per-OST service rates.
+      max_backlog: optional [O, J] client in-flight caps.
+      control_code: traced policy selector (requires ``control="coded"``).
+      checkpoint_dir: where ``save()``/``restore()`` keep carries; may be
+        None for a checkpoint-less service.
+
+    Usage::
+
+        svc = FleetService(cfg, nodes, volume, checkpoint_dir="ckpt/")
+        for rates_w in observation_source():      # [window_ticks, O, J]
+            out = svc.step(rates_w)
+            if svc.window % 600 == 0:
+                svc.save()                        # survive a crash
+        # after a crash: a fresh FleetService + svc.restore() resumes
+        # bitwise where the last save() left off
+    """
+
+    def __init__(
+        self,
+        cfg: FleetConfig,
+        nodes,
+        volume,
+        capacity_per_tick=None,
+        max_backlog=None,
+        control_code=None,
+        checkpoint_dir: Optional[str] = None,
+        keep_checkpoints: int = 3,
+    ):
+        if cfg.partition != "none":
+            raise ValueError(
+                'FleetService runs the single-process online loop; '
+                f'partition={cfg.partition!r} is an offline-scan feature '
+                '(use simulate_fleet for sharded batch runs)')
+        self.cfg = cfg
+        self.checkpoint_dir = checkpoint_dir
+        self.keep_checkpoints = keep_checkpoints
+        self._policy = _resolve_policy(cfg, control_code)
+        self._control_code = (None if control_code is None
+                              else jnp.asarray(control_code, jnp.int32))
+
+        volume = np.asarray(volume, np.float32)
+        n_ost, n_jobs = volume.shape
+        self.n_ost, self.n_jobs = n_ost, n_jobs
+        nodes = jnp.asarray(nodes, jnp.float32)
+        if nodes.ndim == 1:
+            nodes = jnp.broadcast_to(nodes, (n_ost, n_jobs))
+        self._nodes = nodes
+        if capacity_per_tick is None:
+            self._cap_tick = jnp.full((n_ost,), cfg.capacity_per_tick,
+                                      jnp.float32)
+        else:
+            self._cap_tick = jnp.asarray(capacity_per_tick, jnp.float32)
+        if max_backlog is None:
+            self._backlog_cap = jnp.full((n_ost, n_jobs), cfg.max_backlog,
+                                         jnp.float32)
+        else:
+            self._backlog_cap = jnp.asarray(max_backlog, jnp.float32)
+
+        # the arrays stay *traced* jit arguments (not baked constants) so
+        # the compiled step is the same program the offline scan body runs
+        # -- constant folding must not get a chance to fork the numerics
+        def step_fn(nodes, cap_tick, backlog_cap, control_code, carry,
+                    rates_w):
+            ctx = PolicyContext(
+                nodes=nodes, cap_w=cap_tick * cfg.window_ticks,
+                u_max=cfg.u_max, integer_tokens=cfg.integer_tokens,
+                alloc_backend=cfg.alloc_backend, control_code=control_code)
+            return window_step(cfg, self._policy, ctx, cap_tick,
+                               backlog_cap, carry, rates_w)
+
+        # donated carry: the previous window's buffers are dead the moment
+        # the step returns, so XLA reuses them in place -- the long-lived
+        # loop allocates O(1) however many days it runs.  XLA:CPU has no
+        # donation (it would warn on every compile), so only donate where
+        # the runtime honours it; semantics are identical either way.
+        donate = (4,) if jax.default_backend() in ("tpu", "gpu") else ()
+        self._step = jax.jit(step_fn, donate_argnums=donate)
+        self._carry = init_carry(cfg, self._policy, self._ctx(), volume)
+
+    def _ctx(self) -> PolicyContext:
+        return PolicyContext(
+            nodes=self._nodes, cap_w=self._cap_tick * self.cfg.window_ticks,
+            u_max=self.cfg.u_max, integer_tokens=self.cfg.integer_tokens,
+            alloc_backend=self.cfg.alloc_backend,
+            control_code=self._control_code)
+
+    # ------------------------------------------------------------ stepping
+
+    def step(self, rates_w) -> Optional[WindowOut]:
+        """Advance one observation window.
+
+        Args:
+          rates_w: [window_ticks, O, J] client issue attempts observed
+            this window (what the OSTs saw arrive).
+
+        Returns the window's ``WindowOut`` (served/demand/alloc/record,
+        each [O, J]) in trajectory mode, None in streaming mode (the
+        accumulated ``StreamStats`` are at ``self.stats``).
+        """
+        rates_w = jnp.asarray(rates_w, jnp.float32)
+        if rates_w.shape != (self.cfg.window_ticks, self.n_ost, self.n_jobs):
+            raise ValueError(
+                f"rates_w must be [window_ticks={self.cfg.window_ticks}, "
+                f"O={self.n_ost}, J={self.n_jobs}]; got {rates_w.shape}")
+        self._carry, out = self._step(
+            self._nodes, self._cap_tick, self._backlog_cap,
+            self._control_code, self._carry, rates_w)
+        return out
+
+    def run(self, rates, n_windows: Optional[int] = None):
+        """Drive the service from a materialized [T, O, J] trace (tiled
+        periodically past its own length when ``n_windows`` asks for
+        more), collecting outputs into the same result types
+        ``simulate_fleet`` returns.  Mainly a convenience for demos and
+        the online==offline oracle tests."""
+        rates = np.asarray(rates, np.float32)
+        wt = self.cfg.window_ticks
+        trace_windows = rates.shape[0] // wt
+        if trace_windows == 0:
+            raise ValueError(
+                f"trace covers {rates.shape[0]} ticks < one {wt}-tick window")
+        if n_windows is None:
+            n_windows = trace_windows
+        outs = []
+        for w in range(n_windows):
+            s = (w % trace_windows) * wt
+            out = self.step(rates[s:s + wt])
+            if out is not None:
+                outs.append(out)
+        window_seconds = wt * self.cfg.tick_seconds
+        if self.cfg.telemetry == "streaming":
+            return StreamResult(stats=self.stats, queue_final=self.queue,
+                                window_seconds=window_seconds)
+        stack = WindowOut(*(jnp.stack(x) for x in zip(*outs)))
+        return FleetResult(served=stack.served, demand=stack.demand,
+                           alloc=stack.alloc, record=stack.record,
+                           queue_final=self.queue,
+                           window_seconds=window_seconds)
+
+    # ------------------------------------------------------------- state
+
+    @property
+    def carry(self) -> WindowCarry:
+        """The live engine state (treat as read-only)."""
+        return self._carry
+
+    @property
+    def window(self) -> int:
+        """Windows completed since init (or since the restored carry's
+        origin)."""
+        return int(self._carry.window)
+
+    @property
+    def queue(self) -> jnp.ndarray:
+        """[O, J] standing server-side queues."""
+        return self._carry.queue
+
+    @property
+    def alloc(self) -> jnp.ndarray:
+        """[O, J] the allocation that will be applied next window."""
+        return self._carry.alloc
+
+    @property
+    def budget(self) -> jnp.ndarray:
+        """[O, J] the token budget next window's gate will grant
+        (inf = unruled fallback)."""
+        return self._policy.gate(self._carry.alloc, self._ctx())
+
+    @property
+    def stats(self) -> Optional[telemetry.StreamStats]:
+        """Accumulated ``StreamStats`` (streaming telemetry only)."""
+        return (self._carry.stats
+                if self.cfg.telemetry == "streaming" else None)
+
+    # -------------------------------------------------- checkpoint/restore
+
+    def save(self, step: Optional[int] = None) -> str:
+        """Checkpoint the full carry atomically; returns the final path.
+        ``step`` defaults to the current window index."""
+        from repro import checkpoint
+
+        if self.checkpoint_dir is None:
+            raise ValueError("FleetService built without checkpoint_dir")
+        if step is None:
+            step = self.window
+        path = checkpoint.save_checkpoint(self.checkpoint_dir, self._carry,
+                                          step=step)
+        checkpoint.gc_checkpoints(self.checkpoint_dir,
+                                  keep=self.keep_checkpoints)
+        return path
+
+    def restore(self, step: Optional[int] = None) -> int:
+        """Replace the live carry with a saved one (latest by default);
+        returns the restored checkpoint's step.  The service must have
+        been built with the same cfg/shapes/policy that wrote the
+        checkpoint -- leaves are matched by pytree path and shape."""
+        from repro import checkpoint
+
+        if self.checkpoint_dir is None:
+            raise ValueError("FleetService built without checkpoint_dir")
+        carry, step = checkpoint.restore_checkpoint(
+            self.checkpoint_dir, self._carry, step=step)
+        self._carry = carry
+        return step

@@ -44,13 +44,18 @@ ONE window engine (``_run_windows``) drives both entry points:
   a fleet run bitwise-matches independent single-OST runs on the same
   per-OST demand (tested in ``tests/test_fleet_sim.py``).
 
-The engine is a ``lax.scan`` over windows -- jittable end to end.  The inner
-per-tick loop is either a ``lax.scan`` of small ops (``serve_backend="scan"``)
-or one fused whole-window kernel invocation per window
-(``serve_backend="fused"``, ``kernels/fleet_window``).  ``control="coded"``
-routes through the generic ``CodedPolicy`` combinator so a benchmark sweep
-can ``vmap`` one compiled program over scenarios x policies
-(``benchmarks/fleet_sweep.py``).
+The engine is a ``lax.scan`` over windows -- jittable end to end.  The
+per-window body is a standalone step (``window_step``) over a named
+``WindowCarry``: the offline scan here and the online ``FleetService`` loop
+(``storage/service.py``) call the *same* function, so the two disciplines
+cannot drift -- streaming N windows through the online step is bitwise
+identical to one offline scan of the same trace
+(``tests/test_service.py``).  The inner per-tick loop is either a
+``lax.scan`` of small ops (``serve_backend="scan"``) or one fused
+whole-window kernel invocation per window (``serve_backend="fused"``,
+``kernels/fleet_window``).  ``control="coded"`` routes through the generic
+``CodedPolicy`` combinator so a benchmark sweep can ``vmap`` one compiled
+program over scenarios x policies (``benchmarks/fleet_sweep.py``).
 
 Because every per-window op is row-local, the same loop shards across
 devices: ``FleetConfig(partition="ost_shard")`` runs ``_run_windows`` under
@@ -69,7 +74,7 @@ periodic trace to horizons far longer than the materialized rate array.
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Optional
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -217,6 +222,122 @@ def _serve_tick(queue, vol_left, budget, rate_t, backlog_cap, capacity):
 # ------------------------------------------------------- the window engine
 
 
+class WindowCarry(NamedTuple):
+    """The complete cross-window state of the window engine.
+
+    This is the engine's *resume point*: everything the next window needs
+    is in here, so checkpointing the carry and feeding the restored pytree
+    back into ``window_step`` continues the run bitwise
+    (``storage/service.py``).  Field names are part of the checkpoint
+    contract -- ``repro/checkpoint`` keys saved leaves by pytree path
+    (``.queue``, ``.stats.served_sum``, ...), so renaming a field silently
+    orphans every existing checkpoint (pinned by
+    ``tests/test_service.py::test_carry_checkpoint_paths_are_stable``).
+    """
+
+    window: jnp.ndarray        # () int32: windows completed so far
+    queue: jnp.ndarray         # [O, J] standing server-side queues
+    vol_left: jnp.ndarray      # [O, J] remaining volume per job per target
+    policy_state: Any          # policy pytree (shape fixed by cfg.control)
+    alloc: jnp.ndarray         # [O, J] allocation applied next window
+    stats: Any                 # StreamStats (streaming) | () (trajectory)
+
+
+class WindowOut(NamedTuple):
+    """One window's trajectory-mode observation ([O, J] each)."""
+
+    served: jnp.ndarray
+    demand: jnp.ndarray
+    alloc: jnp.ndarray
+    record: jnp.ndarray
+
+
+def init_carry(cfg: FleetConfig, policy: ControlPolicy, ctx: PolicyContext,
+               volume) -> WindowCarry:
+    """Window-0 carry: empty queues, full volumes, the policy's cold-start
+    state and allocation, and zeroed streaming stats when enabled."""
+    n_ost, n_jobs = ctx.nodes.shape
+    if cfg.telemetry not in ("trajectory", "streaming"):
+        raise ValueError(f"unknown telemetry mode: {cfg.telemetry!r}")
+    return WindowCarry(
+        window=jnp.int32(0),
+        queue=jnp.zeros((n_ost, n_jobs), jnp.float32),
+        vol_left=jnp.asarray(volume, jnp.float32),
+        policy_state=policy.init_state(ctx),
+        alloc=policy.init_alloc(ctx),
+        stats=(telemetry.init_stats(n_ost, n_jobs)
+               if cfg.telemetry == "streaming" else ()),
+    )
+
+
+def _serve_window(cfg: FleetConfig, queue, vol_left, budget0, rates_w,
+                  backlog_cap, cap_tick):
+    """All ticks of one window -> (queue, vol_left, served_window)."""
+    if cfg.serve_backend == "fused":
+        # imported lazily: the kernel path pulls in pallas machinery
+        # that the plain scan backend never needs
+        from repro.kernels.fleet_window import ops as window_ops
+        return window_ops.fleet_window_serve(
+            queue, vol_left, budget0, rates_w, backlog_cap, cap_tick)
+    if cfg.serve_backend == "scan":
+        serve_tick = jax.vmap(_serve_tick)
+
+        def tick_fn(carry, rate_t):
+            queue, vol_left, budget = carry
+            queue, vol_left, budget, served, _ = serve_tick(
+                queue, vol_left, budget, rate_t, backlog_cap, cap_tick)
+            return (queue, vol_left, budget), served
+
+        (queue, vol_left, _), served_t = jax.lax.scan(
+            tick_fn, (queue, vol_left, budget0), rates_w
+        )
+        return queue, vol_left, served_t.sum(axis=0)
+    raise ValueError(f"unknown serve_backend: {cfg.serve_backend!r}")
+
+
+def window_step(cfg: FleetConfig, policy: ControlPolicy, ctx: PolicyContext,
+                cap_tick, backlog_cap, carry: WindowCarry, rates_w,
+                axis_name: Optional[str] = None):
+    """One observation window: gate, serve every tick, observe, re-allocate.
+
+    THE per-window body -- the offline ``lax.scan`` in ``_run_windows`` and
+    the online ``FleetService`` loop both call exactly this function, which
+    is what makes the online==offline bitwise oracle free.
+
+    Args:
+      cfg/policy/ctx: static configuration, control discipline, per-run
+        context (``ctx.cap_w`` must equal ``cap_tick * cfg.window_ticks``).
+      cap_tick: [O] per-target service rate; backlog_cap: [O, J].
+      carry: the ``WindowCarry`` from the previous window (or
+        ``init_carry``).
+      rates_w: [window_ticks, O, J] this window's client issue attempts.
+      axis_name: mesh axis when running inside ``shard_map``.
+
+    Returns ``(carry', out)`` with ``out`` a ``WindowOut`` in trajectory
+    mode and ``None`` in streaming mode (the stats live in the carry).
+    """
+    budget0 = policy.gate(carry.alloc, ctx)
+    queue, vol_left, served_w = _serve_window(
+        cfg, carry.queue, carry.vol_left, budget0, rates_w, backlog_cap,
+        cap_tick)
+    demand = served_w + queue
+    pstate, alloc_next = policy.step(
+        carry.policy_state,
+        WindowObs(served=served_w, demand=demand, alloc=carry.alloc), ctx)
+    if cfg.telemetry == "streaming":
+        stats = telemetry.update_stats(carry.stats, served_w, demand,
+                                       carry.alloc, ctx.cap_w,
+                                       axis_name=axis_name)
+        out = None
+    else:
+        stats = carry.stats
+        out = WindowOut(served=served_w, demand=demand, alloc=carry.alloc,
+                        record=policy.record(pstate, ctx))
+    return WindowCarry(window=carry.window + 1, queue=queue,
+                       vol_left=vol_left, policy_state=pstate,
+                       alloc=alloc_next, stats=stats), out
+
+
 def _run_windows(cfg: FleetConfig, policy: ControlPolicy, nodes, rates,
                  volume, cap_tick, backlog_cap, control_code,
                  n_windows: Optional[int], axis_name: Optional[str] = None):
@@ -250,64 +371,19 @@ def _run_windows(cfg: FleetConfig, policy: ControlPolicy, nodes, rates,
         nodes=nodes, cap_w=cap_w, u_max=cfg.u_max,
         integer_tokens=cfg.integer_tokens, alloc_backend=cfg.alloc_backend,
         control_code=control_code)
-    if cfg.telemetry not in ("trajectory", "streaming"):
-        raise ValueError(f"unknown telemetry mode: {cfg.telemetry!r}")
     streaming = cfg.telemetry == "streaming"
-    serve_tick = jax.vmap(_serve_tick)
-
-    def tick_fn(carry, rate_t):
-        queue, vol_left, budget = carry
-        queue, vol_left, budget, served, _ = serve_tick(
-            queue, vol_left, budget, rate_t, backlog_cap, cap_tick)
-        return (queue, vol_left, budget), served
-
-    def serve_window(queue, vol_left, budget0, rates_w):
-        """All ticks of one window -> (queue, vol_left, served_window)."""
-        if cfg.serve_backend == "fused":
-            # imported lazily: the kernel path pulls in pallas machinery
-            # that the plain scan backend never needs
-            from repro.kernels.fleet_window import ops as window_ops
-            return window_ops.fleet_window_serve(
-                queue, vol_left, budget0, rates_w, backlog_cap, cap_tick)
-        if cfg.serve_backend == "scan":
-            (queue, vol_left, _), served_t = jax.lax.scan(
-                tick_fn, (queue, vol_left, budget0), rates_w
-            )
-            return queue, vol_left, served_t.sum(axis=0)
-        raise ValueError(f"unknown serve_backend: {cfg.serve_backend!r}")
 
     def window_fn(carry, rates_w):
-        w, queue, vol_left, pstate, alloc, stats = carry
         if tiled:
             rates_w = jax.lax.dynamic_index_in_dim(
-                trace, jnp.mod(w, trace_windows), keepdims=False)
-        budget0 = policy.gate(alloc, ctx)
-        queue, vol_left, served_w = serve_window(
-            queue, vol_left, budget0, rates_w)
-        demand = served_w + queue
-        pstate, alloc_next = policy.step(
-            pstate, WindowObs(served=served_w, demand=demand, alloc=alloc),
-            ctx)
-        if streaming:
-            stats = telemetry.update_stats(stats, served_w, demand, alloc,
-                                           cap_w, axis_name=axis_name)
-            out = None
-        else:
-            out = (served_w, demand, alloc, policy.record(pstate, ctx))
-        return (w + 1, queue, vol_left, pstate, alloc_next, stats), out
+                trace, jnp.mod(carry.window, trace_windows), keepdims=False)
+        return window_step(cfg, policy, ctx, cap_tick, backlog_cap, carry,
+                           rates_w, axis_name=axis_name)
 
-    carry0 = (
-        jnp.int32(0),
-        jnp.zeros((n_ost, n_jobs), jnp.float32),
-        jnp.asarray(volume, jnp.float32),
-        policy.init_state(ctx),
-        policy.init_alloc(ctx),
-        telemetry.init_stats(n_ost, n_jobs) if streaming else (),
-    )
+    carry0 = init_carry(cfg, policy, ctx, volume)
     xs = None if tiled else trace
-    (_, queue, _, _, _, stats), outs = jax.lax.scan(
-        window_fn, carry0, xs, length=n_windows)
-    return queue, (stats if streaming else outs)
+    carry, outs = jax.lax.scan(window_fn, carry0, xs, length=n_windows)
+    return carry.queue, (carry.stats if streaming else outs)
 
 
 def _run_windows_sharded(cfg: FleetConfig, policy: ControlPolicy, nodes,
@@ -353,7 +429,7 @@ def _run_windows_sharded(cfg: FleetConfig, policy: ControlPolicy, nodes,
     if cfg.telemetry == "streaming":
         outs_specs = telemetry.stats_pspecs("ost")
     else:
-        outs_specs = (P(None, "ost", None),) * 4
+        outs_specs = WindowOut(*(P(None, "ost", None),) * 4)
     run = shard_map(body, mesh=mesh, in_specs=tuple(in_specs),
                     out_specs=(oj, outs_specs), check_rep=False)
     return run(*args)

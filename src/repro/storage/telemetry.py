@@ -119,6 +119,23 @@ def init_stats(n_ost: int, n_jobs: int) -> StreamStats:
     )
 
 
+def stream_stats_leaf_paths() -> Tuple[str, ...]:
+    """Pytree paths of every ``StreamStats`` leaf, in flatten order.
+
+    This is the *checkpoint naming contract*: ``repro/checkpoint`` saves
+    leaves keyed by ``jax.tree_util.keystr`` path, and the online service
+    (``storage/service.py``) checkpoints the whole engine carry --
+    ``StreamStats`` included -- so a controller can resume after a crash.
+    Renaming or reordering a field here silently orphans every checkpoint
+    written before the rename (restore matches by path, so a missing path
+    raises -- but a *swap* of two same-shaped fields would not).  The
+    paths are pinned by ``tests/test_service.py``; extend the carry by
+    *appending* fields, never by renaming.
+    """
+    flat, _ = jax.tree_util.tree_flatten_with_path(init_stats(1, 1))
+    return tuple(jax.tree_util.keystr(path) for path, _ in flat)
+
+
 def stats_pspecs(axis: str):
     """A ``StreamStats`` of ``PartitionSpec``s for ``shard_map`` out_specs:
     everything row-sharded over ``axis`` except the two scalar counters."""

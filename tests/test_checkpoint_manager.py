@@ -1,0 +1,203 @@
+"""Hardening tests for the checkpoint manager: junk-tolerant enumeration,
+real exceptions (not ``assert``) on corrupt/missing restores, and the two
+AsyncCheckpointer regressions -- queue.Full used to drop the NEWEST state,
+and one failed save used to kill the worker thread for the rest of the run.
+"""
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro import checkpoint
+from repro.checkpoint import manager
+
+
+def tiny_state(x=1.0):
+    return {"a": np.full((2, 3), x, np.float32),
+            "b": {"c": np.arange(4, dtype=np.int32)}}
+
+
+# -------------------------------------------------- junk-tolerant listing
+
+
+def test_latest_step_ignores_non_checkpoint_entries(tmp_path):
+    d = str(tmp_path)
+    checkpoint.save_checkpoint(d, tiny_state(), step=3)
+    checkpoint.save_checkpoint(d, tiny_state(), step=7)
+    # the junk a real directory accumulates: staging dirs, editor
+    # droppings, user files, unparsable names
+    os.makedirs(os.path.join(d, "step_00000009.tmp"))
+    os.makedirs(os.path.join(d, "step_latest"))
+    os.makedirs(os.path.join(d, "notes"))
+    open(os.path.join(d, "step_00000011"), "w").close()   # a FILE, not a dir
+    open(os.path.join(d, "README.md"), "w").close()
+    assert checkpoint.latest_step(d) == 7
+
+
+def test_latest_step_empty_and_missing_directory(tmp_path):
+    assert checkpoint.latest_step(str(tmp_path)) is None
+    assert checkpoint.latest_step(str(tmp_path / "never_made")) is None
+
+
+def test_gc_keeps_newest_and_skips_junk(tmp_path):
+    d = str(tmp_path)
+    for s in (1, 2, 3, 4, 5):
+        checkpoint.save_checkpoint(d, tiny_state(), step=s)
+    os.makedirs(os.path.join(d, "step_00000099.tmp"))
+    open(os.path.join(d, "keep.txt"), "w").close()
+    checkpoint.gc_checkpoints(d, keep=2)
+    kept = sorted(x for x in os.listdir(d) if manager._STEP_RE.fullmatch(x))
+    assert kept == ["step_00000004", "step_00000005"]
+    assert os.path.exists(os.path.join(d, "keep.txt"))          # untouched
+    assert os.path.exists(os.path.join(d, "step_00000099.tmp"))
+
+
+def test_unpadded_step_dirname_round_trips(tmp_path):
+    """A ``step_123`` written by hand (or an older tool) must list, restore
+    and gc by its *actual* dirname, not a re-derived zero-padded one."""
+    d = str(tmp_path)
+    path = checkpoint.save_checkpoint(d, tiny_state(2.5), step=123)
+    os.rename(path, os.path.join(d, "step_123"))
+    assert checkpoint.latest_step(d) == 123
+    restored, step = checkpoint.restore_checkpoint(d, tiny_state(0.0))
+    assert step == 123
+    np.testing.assert_array_equal(restored["a"], tiny_state(2.5)["a"])
+    checkpoint.gc_checkpoints(d, keep=0)
+    assert checkpoint.latest_step(d) is None
+
+
+# ------------------------------------------- restore raises, never asserts
+
+
+def test_restore_missing_directory_raises_file_not_found(tmp_path):
+    with pytest.raises(FileNotFoundError, match="no checkpoint"):
+        checkpoint.restore_checkpoint(str(tmp_path / "nope"), tiny_state())
+
+
+def test_restore_missing_step_raises_file_not_found(tmp_path):
+    d = str(tmp_path)
+    checkpoint.save_checkpoint(d, tiny_state(), step=1)
+    with pytest.raises(FileNotFoundError, match="step 5"):
+        checkpoint.restore_checkpoint(d, tiny_state(), step=5)
+
+
+def test_restore_renamed_field_raises_value_error(tmp_path):
+    d = str(tmp_path)
+    checkpoint.save_checkpoint(d, tiny_state(), step=1)
+    renamed = {"a": np.zeros((2, 3), np.float32),
+               "b": {"renamed": np.zeros(4, np.int32)}}
+    with pytest.raises(ValueError, match="no leaf for pytree path"):
+        checkpoint.restore_checkpoint(d, renamed)
+
+
+def test_restore_shape_mismatch_raises_value_error(tmp_path):
+    d = str(tmp_path)
+    checkpoint.save_checkpoint(d, tiny_state(), step=1)
+    wrong = {"a": np.zeros((4, 4), np.float32),
+             "b": {"c": np.zeros(4, np.int32)}}
+    with pytest.raises(ValueError, match="shape"):
+        checkpoint.restore_checkpoint(d, wrong)
+
+
+# ------------------------------------------------------ AsyncCheckpointer
+
+
+class GateController:
+    """Stands in for an AdapTBF controller: ``request`` blocks on an event,
+    so the test controls exactly when the in-flight save completes."""
+
+    def __init__(self):
+        self.gate = threading.Event()
+
+    def request(self, job, nbytes, target=None):
+        self.gate.wait(timeout=30)
+        return 0
+
+
+def wait_until(pred, timeout=30.0):
+    t0 = time.monotonic()
+    while not pred():
+        if time.monotonic() - t0 > timeout:
+            raise AssertionError("condition not reached in time")
+        time.sleep(0.005)
+
+
+def test_async_supersede_drops_older_queued_state(tmp_path):
+    """Regression: with one save in flight and one queued, a third submit
+    hit ``queue.Full`` and silently dropped the NEW state -- the stale
+    queued snapshot got saved instead.  Now the queued (older) one is
+    replaced: the freshest state always wins."""
+    gate = GateController()
+    ck = checkpoint.AsyncCheckpointer(str(tmp_path), controller=gate,
+                                      keep=10)
+    try:
+        ck.submit(tiny_state(1.0), step=1)    # worker picks up, blocks
+        wait_until(lambda: ck._q.empty())     # 1 is in flight
+        ck.submit(tiny_state(2.0), step=2)    # queued
+        ck.submit(tiny_state(3.0), step=3)    # must REPLACE 2, not vanish
+        gate.gate.set()                       # release the worker
+        wait_until(lambda: len(ck.saved_steps) == 2)
+        assert ck.saved_steps == [1, 3]       # 2 was superseded
+        restored, step = checkpoint.restore_checkpoint(
+            str(tmp_path), tiny_state(0.0))
+        assert step == 3
+        np.testing.assert_array_equal(restored["a"],
+                                      tiny_state(3.0)["a"])
+    finally:
+        gate.gate.set()
+        ck.close()
+
+
+def test_async_worker_survives_a_failed_save(tmp_path, monkeypatch):
+    """Regression: an exception in ``save_checkpoint`` used to kill the
+    worker thread, silently disabling every later checkpoint."""
+    calls = {"n": 0}
+    real_save = manager.save_checkpoint
+
+    def flaky_save(directory, state, step, controller=None, **kw):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise OSError("disk full")
+        return real_save(directory, state, step, controller, **kw)
+
+    monkeypatch.setattr(manager, "save_checkpoint", flaky_save)
+    ck = checkpoint.AsyncCheckpointer(str(tmp_path), keep=10)
+    try:
+        ck.submit(tiny_state(1.0), step=1)    # this save fails
+        wait_until(lambda: len(ck.errors) == 1)
+        assert ck._thread.is_alive()          # worker survived
+        assert isinstance(ck.errors[0][1], OSError)
+        ck.submit(tiny_state(2.0), step=2)    # next save succeeds
+        wait_until(lambda: ck.saved_steps == [2])
+        assert checkpoint.latest_step(str(tmp_path)) == 2
+    finally:
+        ck.close()
+
+
+def test_async_submit_after_close_raises(tmp_path):
+    ck = checkpoint.AsyncCheckpointer(str(tmp_path))
+    ck.close()
+    with pytest.raises(RuntimeError, match="close"):
+        ck.submit(tiny_state(), step=1)
+
+
+def test_async_submit_snapshots_state(tmp_path):
+    """The submitted state is snapshotted host-side at submit time: caller
+    mutations after submit must not leak into the checkpoint."""
+    gate = GateController()
+    ck = checkpoint.AsyncCheckpointer(str(tmp_path), controller=gate)
+    state = tiny_state(5.0)
+    try:
+        ck.submit(state, step=1)
+        state["a"][:] = -1.0                  # mutate after submit
+        gate.gate.set()
+        wait_until(lambda: ck.saved_steps == [1])
+        restored, _ = checkpoint.restore_checkpoint(
+            str(tmp_path), tiny_state(0.0))
+        np.testing.assert_array_equal(restored["a"],
+                                      tiny_state(5.0)["a"])
+    finally:
+        gate.gate.set()
+        ck.close()

@@ -1,0 +1,223 @@
+"""End-to-end tests of the host-side AdapTBF control plane on a virtual
+clock: striping, window rolls, blocked-request pacing, and the two demand
+accounting bugs the online serving mode exposed (retry inflation in
+``try_consume``; demand wiped by a roll while a ``request`` waiter sleeps).
+"""
+import threading
+
+import numpy as np
+
+from repro.storage import RPC_BYTES, AdapTBFController
+
+
+class VirtualClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def time(self):
+        return self.t
+
+    def sleep(self, dt):
+        self.t += dt
+
+
+def make_controller(**kw):
+    clk = VirtualClock()
+    kw.setdefault("n_targets", 4)
+    kw.setdefault("capacity_rpc_per_s", 1000.0)
+    kw.setdefault("window_s", 0.1)
+    ctl = AdapTBFController(time_fn=clk.time, sleep_fn=clk.sleep, **kw)
+    return ctl, clk
+
+
+# ------------------------------------------------------- register / stripe
+
+
+def test_register_and_stripe_sets():
+    ctl, _ = make_controller()
+    ctl.register_job("train", nodes=8.0, stripe_count=2)
+    ctl.register_job("ckpt", nodes=1.0)       # default: full width
+    assert ctl.stripe_set("train").shape == (2,)
+    assert ctl.stripe_set("ckpt").shape == (4,)
+    assert set(ctl.stripe_set("ckpt")) == {0, 1, 2, 3}
+    # registration is idempotent
+    assert ctl.register_job("train", nodes=8.0) == 0
+
+
+def test_requests_round_robin_over_stripe_set():
+    ctl, _ = make_controller()
+    ctl.register_job("a", nodes=1.0, stripe_count=2)
+    stripes = list(ctl.stripe_set("a"))
+    targets = [ctl.request("a", RPC_BYTES) for _ in range(6)]
+    assert targets == (stripes * 3)
+
+
+def test_unruled_jobs_pass_without_blocking():
+    """Fallback semantics: before the first allocation rules a job, its
+    budget is infinite -- no sleeping, no throttling."""
+    ctl, clk = make_controller()
+    ctl.register_job("a", nodes=1.0)
+    t0 = clk.t
+    for _ in range(50):
+        ctl.request("a", 4 * RPC_BYTES)
+    assert clk.t == t0                        # never slept
+
+
+def test_windows_roll_on_the_virtual_clock():
+    ctl, clk = make_controller(window_s=0.1)
+    ctl.register_job("a", nodes=1.0)
+    assert ctl.windows_run == 0
+    ctl.request("a", RPC_BYTES)
+    clk.sleep(0.35)                           # 3 whole windows elapse
+    ctl.request("a", RPC_BYTES)
+    assert ctl.windows_run >= 1
+    assert ctl.budget_of("a").shape == (4,)
+
+
+def install_manual_roll(ctl, clk, demands=None, admit_after=None):
+    """Replace the allocator-driven roll with a deterministic one that
+    keeps the hand-set ``_budget`` (optionally opening it after N rolls)
+    and records the demand matrix each allocation would have seen."""
+
+    def manual_roll():
+        if demands is not None:
+            demands.append(ctl._demand.copy())
+        ctl._demand[:] = 0.0
+        ctl._consumed[:] = 0.0
+        ctl._denied.clear()
+        ctl._window_end = clk.time() + ctl.window_s
+        ctl.windows_run += 1
+        if admit_after is not None and ctl.windows_run >= admit_after:
+            ctl._budget[:] = np.inf
+
+    ctl._roll_window = manual_roll
+
+
+def test_blocked_request_is_paced_not_refused():
+    """A ruled job that over-asks sleeps to the window boundary and
+    completes in the next window once consumption resets -- pacing, not
+    failure."""
+    ctl, clk = make_controller(window_s=0.1)
+    ctl.register_job("hog", nodes=1.0, stripe_count=1)
+    install_manual_roll(ctl, clk)
+    ctl._budget[:] = 5.0                      # 5 tokens per window
+    t = ctl.request("hog", 5 * RPC_BYTES)     # fills the window exactly
+    t0, w0 = clk.t, ctl.windows_run
+    assert ctl.request("hog", 5 * RPC_BYTES) == t   # same (only) stripe
+    assert clk.t > t0                         # had to sleep
+    assert ctl.windows_run == w0 + 1          # across one window boundary
+    assert ctl._consumed[t, 0] == 5.0         # admitted in the new window
+
+
+# --------------------------------------- satellite 1: try_consume inflation
+
+
+def test_try_consume_denied_demand_counted_once_per_window():
+    """Regression: a blocked serving request polled every engine step used
+    to add its tokens to the demand matrix on EVERY retry, inflating d_x by
+    the retry count and over-granting the blocked class."""
+    ctl, clk = make_controller()
+    ctl.register_job("serve", nodes=1.0)
+    ctl._budget[:] = 0.0                      # force denial
+    for _ in range(25):                       # 25 retries, same request
+        assert not ctl.try_consume("serve", 10.0, target=1, request_id=77)
+    demand = ctl.observed_demand("serve")
+    assert demand[1] == 10.0                  # once, not 250
+
+
+def test_try_consume_distinct_requests_all_count():
+    ctl, _ = make_controller()
+    ctl.register_job("serve", nodes=1.0)
+    ctl._budget[:] = 0.0
+    for rid in range(5):
+        assert not ctl.try_consume("serve", 10.0, target=0, request_id=rid)
+    assert ctl.observed_demand("serve")[0] == 50.0
+
+
+def test_try_consume_denied_demand_reregisters_after_roll():
+    """The dedup set resets at each roll: a request still blocked in the
+    NEXT window is genuinely still demand and must be seen again."""
+    ctl, clk = make_controller()
+    ctl.register_job("serve", nodes=1.0)
+    ctl._budget[:] = 0.0
+    ctl.try_consume("serve", 10.0, target=2, request_id=5)
+    assert ctl.observed_demand("serve")[2] == 10.0
+    clk.sleep(0.11)                           # roll the window
+    ctl._budget[:] = 0.0                      # still out of budget
+    ctl.try_consume("serve", 10.0, target=2, request_id=5)
+    assert ctl.observed_demand("serve")[2] == 10.0
+
+
+def test_try_consume_success_counts_demand_and_consumes():
+    ctl, _ = make_controller()
+    ctl.register_job("serve", nodes=1.0)
+    assert ctl.try_consume("serve", 7.0, target=3)
+    assert ctl.observed_demand("serve")[3] == 7.0
+    assert ctl._consumed[3, 0] == 7.0
+
+
+def test_try_consume_anonymous_dedup_is_per_size():
+    """Without a request_id, dedup keys on (job, target, tokens): the same
+    retried size collapses, a different size still registers."""
+    ctl, _ = make_controller()
+    ctl.register_job("serve", nodes=1.0)
+    ctl._budget[:] = 0.0
+    for _ in range(10):
+        ctl.try_consume("serve", 4.0, target=0)
+    ctl.try_consume("serve", 9.0, target=0)
+    assert ctl.observed_demand("serve")[0] == 13.0
+
+
+# ------------------------------- satellite 2: demand wiped under a waiter
+
+
+def test_blocked_request_reregisters_demand_across_rolls():
+    """Regression: ``_roll_window`` zeroes the demand matrix; a waiter
+    sleeping through the roll used to leave ZERO visible demand for its
+    still-pending tokens, so the allocator starved exactly the job that
+    was throttled.  The waiter must re-register after each observed roll."""
+    ctl, clk = make_controller(window_s=0.1)
+    ctl.register_job("hog", nodes=1.0, stripe_count=1)
+    demands = []
+    install_manual_roll(ctl, clk, demands=demands, admit_after=3)
+    ctl._budget[:] = 4.0                      # too small for the request
+    tokens = 10
+    t = ctl.request("hog", tokens * RPC_BYTES)
+    # every allocation that ran while the request waited saw its pending
+    # tokens (pre-fix: only the first -- the roll wiped them and the waiter
+    # never re-registered, so rolls 2..N saw [10, 0, 0])
+    assert [float(d[t, 0]) for d in demands] == [10.0, 10.0, 10.0]
+
+
+def test_observed_demand_is_a_copy():
+    ctl, _ = make_controller()
+    ctl.register_job("a", nodes=1.0)
+    d = ctl.observed_demand("a")
+    d[:] = 123.0
+    assert (ctl.observed_demand("a") == 0).all()
+
+
+# ---------------------------------------------------------- thread safety
+
+
+def test_concurrent_requests_do_not_corrupt_accounting():
+    """Two threads metering the same unruled job: total consumed must be
+    the exact sum of both (the lock protects read-modify-write)."""
+    ctl, _ = make_controller()
+    ctl.register_job("a", nodes=1.0, stripe_count=1)
+    n, errs = 200, []
+
+    def worker():
+        try:
+            for _ in range(n):
+                ctl.request("a", RPC_BYTES)
+        except Exception as e:  # pragma: no cover
+            errs.append(e)
+
+    threads = [threading.Thread(target=worker) for _ in range(2)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    assert not errs
+    assert ctl._consumed[:, 0].sum() + 0 == 2 * n  # 1 token per request

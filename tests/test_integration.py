@@ -175,6 +175,34 @@ def test_engine_matches_sequential_decode():
         assert r.output == want, (r.output, want)
 
 
+def test_engine_empty_prompt_generates_from_bos():
+    """Regression: an empty prompt used to crash ``_admit`` on
+    ``req.prompt[0]``; it now seeds generation from BOS, and the output
+    matches greedy decode of an explicit [BOS] prompt -- through the full
+    ``run_until_drained`` path, mixed with normal requests."""
+    from repro.serving import BOS_TOKEN
+
+    cfg = CFG
+    params = models.init_params(cfg, jax.random.PRNGKey(1))
+    eng = ServingEngine(cfg, params, slots=2, max_len=64)
+    empty = Request(prompt=[], max_new_tokens=4)
+    normal = Request(prompt=[5, 9], max_new_tokens=3, klass="batch")
+    eng.submit(empty)
+    eng.submit(normal)
+    done = eng.run_until_drained()
+    assert len(done) == 2 and empty.done
+    assert empty.output == _greedy_reference(cfg, params, [BOS_TOKEN], 4)
+    assert normal.output == _greedy_reference(cfg, params, [5, 9], 3)
+
+
+def test_engine_rejects_empty_prompt_with_no_generation():
+    cfg = CFG
+    params = models.init_params(cfg, jax.random.PRNGKey(1))
+    eng = ServingEngine(cfg, params, slots=1, max_len=64)
+    with pytest.raises(ValueError, match="at least one"):
+        eng.submit(Request(prompt=[], max_new_tokens=0))
+
+
 def test_engine_admission_respects_class_budget():
     """With a tiny controller budget, low-priority 'batch' requests are
     admitted later than interactive ones."""
