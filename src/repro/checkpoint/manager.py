@@ -143,8 +143,11 @@ def restore_checkpoint(directory: str, like: Any, step: Optional[int] = None,
 
 def gc_checkpoints(directory: str, keep: int = 3):
     steps = _list_steps(directory)
-    # not steps[:-keep]: for keep=0 that is the empty slice, keeping all
-    for _, d in steps[:len(steps) - keep]:
+    # not steps[:-keep]: for keep=0 that is the empty slice, keeping all;
+    # and the stop must clamp at 0 -- with fewer checkpoints than `keep` a
+    # negative stop would slice from the END, deleting the very
+    # checkpoints retention promises to keep
+    for _, d in steps[:max(0, len(steps) - keep)]:
         shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
 
 
@@ -215,7 +218,14 @@ class AsyncCheckpointer:
                         pass
 
     def close(self):
+        """Flush any pending save and stop the worker.  The sentinel is
+        enqueued OUTSIDE the submit lock: on a maxsize=1 queue the put can
+        block behind an in-flight save, and holding the lock for that long
+        would stall concurrent ``submit`` callers for the full save
+        duration instead of failing them fast with the closed error."""
         with self._submit_lock:
+            if self._closed:
+                return
             self._closed = True
-            self._q.put(None)
+        self._q.put(None)
         self._thread.join(timeout=60)

@@ -13,6 +13,7 @@ Time is injectable so tests run on a virtual clock.
 """
 from __future__ import annotations
 
+import logging
 import threading
 import time
 from typing import Callable, Dict, Optional, Set, Tuple
@@ -23,6 +24,8 @@ import numpy as np
 from repro.core import fleet_allocate
 from repro.core.state import init_fleet_state
 from repro.storage.striping import stripe_targets
+
+logger = logging.getLogger(__name__)
 
 RPC_BYTES = 1 << 20  # 1 token = 1 RPC = 1 MB
 
@@ -174,6 +177,17 @@ class AdapTBFController:
                 if key not in self._denied:
                     self._denied.add(key)
                     self._demand[target, idx] += tokens
+                elif request_id is None:
+                    # anonymous dedup cannot tell a retry from a distinct
+                    # same-sized request; a second anonymous denial of the
+                    # same size is silently NOT re-counted as demand --
+                    # surface that so callers know to pass a request_id
+                    logger.debug(
+                        "try_consume: anonymous denied request (job=%s, "
+                        "target=%d, tokens=%s) deduplicated this window; "
+                        "distinct same-sized requests under-report demand "
+                        "-- pass request_id to count them separately",
+                        job, target, tokens)
                 return False
             self._demand[target, idx] += tokens
             self._consumed[target, idx] += tokens

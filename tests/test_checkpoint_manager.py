@@ -54,6 +54,37 @@ def test_gc_keeps_newest_and_skips_junk(tmp_path):
     assert os.path.exists(os.path.join(d, "step_00000099.tmp"))
 
 
+def test_gc_keep_greater_than_count_keeps_everything(tmp_path):
+    """Regression: with fewer checkpoints than ``keep`` the slice stop went
+    negative and Python sliced from the END, deleting checkpoints the
+    retention policy promised to keep -- under the default keep=3 every
+    save silently destroyed the previous checkpoint (keep degraded to 1)."""
+    d = str(tmp_path)
+    checkpoint.save_checkpoint(d, tiny_state(1.0), step=1)
+    checkpoint.gc_checkpoints(d, keep=3)
+    assert checkpoint.latest_step(d) == 1
+    checkpoint.save_checkpoint(d, tiny_state(2.0), step=2)
+    checkpoint.gc_checkpoints(d, keep=3)
+    kept = sorted(s for s, _ in manager._list_steps(d))
+    assert kept == [1, 2]                     # BOTH survive, not just the last
+
+
+def test_async_default_keep_retains_older_checkpoints(tmp_path):
+    """Same regression through the production path: AsyncCheckpointer with
+    the default keep=3 must accumulate restore points, not keep only the
+    newest one."""
+    ck = checkpoint.AsyncCheckpointer(str(tmp_path))   # default keep=3
+    try:
+        ck.submit(tiny_state(1.0), step=1)
+        wait_until(lambda: ck.saved_steps == [1])
+        ck.submit(tiny_state(2.0), step=2)
+        wait_until(lambda: ck.saved_steps == [1, 2])
+    finally:
+        ck.close()
+    kept = sorted(s for s, _ in manager._list_steps(str(tmp_path)))
+    assert kept == [1, 2]
+
+
 def test_unpadded_step_dirname_round_trips(tmp_path):
     """A ``step_123`` written by hand (or an older tool) must list, restore
     and gc by its *actual* dirname, not a re-derived zero-padded one."""
@@ -174,6 +205,33 @@ def test_async_worker_survives_a_failed_save(tmp_path, monkeypatch):
         assert checkpoint.latest_step(str(tmp_path)) == 2
     finally:
         ck.close()
+
+
+def test_async_close_flushes_without_holding_submit_lock(tmp_path):
+    """``close`` can block putting the sentinel behind an in-flight save
+    plus a queued snapshot; it must do so WITHOUT holding the submit lock
+    (concurrent submitters fail fast with the closed error instead of
+    stalling for the full save duration) and must flush the queued
+    snapshot, not drop it."""
+    gate = GateController()
+    ck = checkpoint.AsyncCheckpointer(str(tmp_path), controller=gate,
+                                      keep=10)
+    ck.submit(tiny_state(1.0), step=1)       # worker picks up, blocks
+    wait_until(lambda: ck._q.empty())        # 1 is in flight
+    ck.submit(tiny_state(2.0), step=2)       # queued behind it
+    closer = threading.Thread(target=ck.close)
+    closer.start()
+    wait_until(lambda: ck._closed)           # close is draining (queue full)
+    assert ck._submit_lock.acquire(timeout=5), \
+        "close() held the submit lock while blocked on the sentinel put"
+    ck._submit_lock.release()
+    with pytest.raises(RuntimeError, match="close"):
+        ck.submit(tiny_state(3.0), step=3)   # fails fast, no stall
+    gate.gate.set()                          # let the saves drain
+    closer.join(timeout=30)
+    assert not closer.is_alive()
+    assert ck.saved_steps == [1, 2]          # queued snapshot was flushed
+    ck.close()                               # idempotent
 
 
 def test_async_submit_after_close_raises(tmp_path):
