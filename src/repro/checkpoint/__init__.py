@@ -1,6 +1,7 @@
 """Fault-tolerant, elastic, AdapTBF-paced checkpointing."""
 from repro.checkpoint.manager import (
     AsyncCheckpointer,
+    checkpoint_meta,
     gc_checkpoints,
     latest_step,
     restore_checkpoint,
@@ -8,4 +9,4 @@ from repro.checkpoint.manager import (
 )
 
 __all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
-           "gc_checkpoints", "AsyncCheckpointer"]
+           "checkpoint_meta", "gc_checkpoints", "AsyncCheckpointer"]

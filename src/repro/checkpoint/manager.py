@@ -93,6 +93,29 @@ def latest_step(directory: str) -> Optional[int]:
     return steps[-1][0] if steps else None
 
 
+def checkpoint_meta(directory: str, step: Optional[int] = None) -> dict:
+    """The ``meta.json`` of a committed checkpoint (latest by default):
+    ``{"step": n, "leaves": [{"path", "file", "shape", "dtype"}, ...]}``.
+
+    Lets callers validate compatibility (shapes, pytree paths) *before*
+    paying for the leaf loads -- and turn a would-be cryptic leaf error
+    into a config mismatch named up front (``FleetService.restore``).
+    Raises ``FileNotFoundError`` like ``restore_checkpoint`` when no
+    (matching) checkpoint exists.
+    """
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {directory}")
+    d = _step_dir(directory, step)
+    if d is None:
+        raise FileNotFoundError(
+            f"no checkpoint for step {step} under {directory} "
+            f"(have steps {[s for s, _ in _list_steps(directory)]})")
+    with open(os.path.join(d, "meta.json")) as f:
+        return json.load(f)
+
+
 def restore_checkpoint(directory: str, like: Any, step: Optional[int] = None,
                        shardings: Any = None) -> tuple[Any, int]:
     """Restore into the structure of ``like``.  ``shardings`` (same pytree

@@ -19,6 +19,17 @@ global constant sized to the whole fleet.  A policy that honours the
 no-row-mixing rule is automatically bitwise-identical sharded vs not; one
 that reduces across rows will fail ``tests/test_sharding.py``.
 
+Fault extension of the contract (``storage/faults.py``, DESIGN.md section
+11): fault-injected runs hand policies an *effective* ``ctx.cap_w`` (zero
+while an OST is down, scaled under capacity droop) and an optional
+``WindowObs.up`` liveness column.  Both are ``[O]``-shaped row state
+sharded alongside everything else, so fault handling must stay row-local
+too -- a policy reacting to OST ``o``'s outage may touch only row ``o``
+(adaptbf's ledger reclaim is the template).  Every policy must define
+degraded-mode behavior at ``cap_w == 0``: no NaN/Inf from zero divides,
+no inverted clips (the built-ins are hardened and chaos-tested in
+``tests/test_faults.py``).
+
 Policies are registered by name::
 
     @register_policy("my_policy")
@@ -87,11 +98,26 @@ class WindowObs(NamedTuple):
     served: RPCs served during the window.
     demand: the allocator's demand signal d_x (served + standing queue).
     alloc:  the allocation that was *applied* this window.
+    up:     optional [O, 1] target-liveness column (1.0 = serving, 0.0 =
+            down this window); ``None`` outside fault-injected runs.  A
+            policy may use it for fault-aware state transitions (adaptbf
+            reclaims lender-side ledger entries of a down OST) but, like
+            every other field, only row-locally.
+
+    Degraded-mode contract (fault injection, DESIGN.md section 11):
+    under a ``FaultPlan`` the engine hands ``step`` the *effective*
+    ``ctx.cap_w`` -- zero while the OST is down, scaled under capacity
+    droop -- and on a lost-telemetry window the previous delivered
+    observation (last-observation-hold).  Every registered policy must
+    return finite, non-negative-or-inf allocations for **any**
+    ``cap_w >= 0``: zeroed capacity is a legal input, never a NaN source
+    (``tests/test_faults.py``).
     """
 
     served: jnp.ndarray
     demand: jnp.ndarray
     alloc: jnp.ndarray
+    up: Optional[jnp.ndarray] = None
 
 
 class ControlPolicy:
@@ -192,9 +218,10 @@ class AdapTBFPolicy(ControlPolicy):
 
     def step(self, state, obs, ctx):
         if ctx.alloc_backend == "core":
-            return adaptbf.fleet_allocate(
+            state, alloc = adaptbf.fleet_allocate(
                 state, obs.demand, ctx.nodes, ctx.cap_w,
                 u_max=ctx.u_max, integer_tokens=ctx.integer_tokens)
+            return self._reclaim(state, obs), alloc
         if ctx.alloc_backend == "pallas":
             if not ctx.integer_tokens:
                 raise ValueError(
@@ -206,9 +233,24 @@ class AdapTBFPolicy(ControlPolicy):
             alloc, rec, rem = ops.fleet_alloc(
                 obs.demand, ctx.nodes, state.record, state.remainder,
                 state.alloc_prev, ctx.cap_w, u_max=ctx.u_max)
-            return AllocatorState(record=rec, remainder=rem,
-                                  alloc_prev=alloc), alloc
+            state = AllocatorState(record=rec, remainder=rem,
+                                   alloc_prev=alloc)
+            return self._reclaim(state, obs), alloc
         raise ValueError(f"unknown alloc_backend: {ctx.alloc_backend!r}")
+
+    @staticmethod
+    def _reclaim(state, obs):
+        """Lender-side ledger reclaim for dead OSTs: while an OST is down
+        its lend/borrow record is pinned to zero (row-locally), so tokens
+        lent *to* or owed *by* jobs on a dead target are written off
+        instead of stranded -- when the OST comes back, borrowing resumes
+        from a clean ledger rather than repaying debt accrued against
+        capacity that no longer existed.  ``where`` (not ``record * up``)
+        so negative ledger entries cannot leave ``-0.0`` behind."""
+        if obs.up is None:
+            return state
+        return state._replace(
+            record=jnp.where(obs.up > 0, state.record, 0.0))
 
     def record(self, state, ctx):
         return state.record
@@ -306,7 +348,11 @@ class AIMDPolicy(ControlPolicy):
         p = ctx.nodes / jnp.maximum(
             jnp.sum(ctx.nodes, axis=-1, keepdims=True), _EPS)
         served_tot = jnp.sum(obs.served, axis=-1, keepdims=True)
-        congested = served_tot >= self.sat * ctx.cap_w[:, None]
+        cap_col = ctx.cap_w[:, None]
+        # a zeroed capacity (down OST under fault injection) must read as
+        # "nothing to throttle", not as congestion: 0 >= 0.95 * 0 would
+        # otherwise install rules against a capacity of zero
+        congested = (served_tot >= self.sat * cap_col) & (cap_col > 0.0)
         # decrease only the jobs whose own rule was *binding* (budget
         # exhausted) during a congested window: a congested unruled window
         # just installs rules at the current rates, and a ruled job that
@@ -317,8 +363,12 @@ class AIMDPolicy(ControlPolicy):
         rate = jnp.where(
             congested & binding, rate * self.md,
             jnp.where(congested, rate,
-                      rate + self.ai_frac * ctx.cap_w[:, None] * p))
-        rate = jnp.clip(rate, self.floor, ctx.cap_w[:, None])
+                      rate + self.ai_frac * cap_col * p))
+        # clip hi >= lo always: with cap_w = 0 (down OST) a raw
+        # clip(rate, 1.0, 0.0) would collapse every carried rate to the
+        # inverted bound; flooring the ceiling keeps rates frozen at the
+        # floor through an outage (AI increment is 0 when cap_w is 0)
+        rate = jnp.clip(rate, self.floor, jnp.maximum(cap_col, self.floor))
         throttled = jnp.where(obs.demand > 0, rate, 0.0)
         if ctx.integer_tokens:
             throttled = jnp.floor(throttled)

@@ -50,7 +50,7 @@ from typing import Callable, Dict, NamedTuple, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.storage import striping
+from repro.storage import faults, striping
 
 
 # ------------------------------------------------------------ trace algebra
@@ -468,8 +468,14 @@ def _profile_saturation(rng, t, n_ost, n_jobs, cap):
             else float(rng.integers(32, 128))
         jobs.append(JobSpec(trace=tr, nodes=nodes, volume=volume,
                             max_backlog=float(rng.choice([64.0, 256.0]))))
-    capacity = np.where(rng.random(n_ost) < 0.5, cap, 0.4 * cap) \
-        .astype(np.float32)
+    # half the targets degraded to 40%: the FaultPlan capacity-droop
+    # primitive, horizon-constant and therefore baked into the static
+    # capacity vector (a droop that never lifts IS a smaller capacity).
+    # Consumed after the per-job loop and bitwise-pinned by
+    # tests/test_scengen.py::test_saturation_profile_pinned, so existing
+    # seed grids do not shift.
+    capacity = faults.degraded_capacity(rng, n_ost, cap,
+                                        p_degraded=0.5, scale=0.4)
     return jobs, capacity, "round_robin"
 
 

@@ -31,7 +31,8 @@ names must stay stable across versions
 """
 from __future__ import annotations
 
-from typing import Optional
+import time
+from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -39,6 +40,7 @@ import numpy as np
 
 from repro.core.policies import PolicyContext
 from repro.storage import telemetry
+from repro.storage.faults import FaultPlan, lost_telemetry_row
 from repro.storage.simulator import (
     FleetConfig,
     FleetResult,
@@ -49,6 +51,21 @@ from repro.storage.simulator import (
     init_carry,
     window_step,
 )
+
+
+class IngestResult(NamedTuple):
+    """What one ``FleetService.ingest`` round did.
+
+    out:       the window's ``WindowOut`` (trajectory mode) or None.
+    delivered: True when the observation arrived (possibly after
+               retries); False when the watchdog substituted the
+               loss-mask path.
+    attempts:  fetch attempts made (1 = first try succeeded).
+    """
+
+    out: Optional[WindowOut]
+    delivered: bool
+    attempts: int
 
 
 class FleetService:
@@ -66,6 +83,14 @@ class FleetService:
       control_code: traced policy selector (requires ``control="coded"``).
       checkpoint_dir: where ``save()``/``restore()`` keep carries; may be
         None for a checkpoint-less service.
+      fault_plan: optional ``faults.FaultPlan`` ([W, O] leaves).  Each
+        ``step`` consumes row ``window % W`` (the plan tiles an unbounded
+        online horizon the way rate traces tile), unless the caller
+        passes an explicit per-step fault row.
+      checkpoint_on_fault: with a ``checkpoint_dir``, ``save()``
+        automatically *before* stepping into any window where an OST
+        transitions up -> down, so a post-mortem ``restore()`` replays
+        the run from the disturbance onward.
 
     Usage::
 
@@ -88,6 +113,8 @@ class FleetService:
         control_code=None,
         checkpoint_dir: Optional[str] = None,
         keep_checkpoints: int = 3,
+        fault_plan: Optional[FaultPlan] = None,
+        checkpoint_on_fault: bool = True,
     ):
         if cfg.partition != "none":
             raise ValueError(
@@ -97,6 +124,7 @@ class FleetService:
         self.cfg = cfg
         self.checkpoint_dir = checkpoint_dir
         self.keep_checkpoints = keep_checkpoints
+        self.checkpoint_on_fault = checkpoint_on_fault
         self._policy = _resolve_policy(cfg, control_code)
         self._control_code = (None if control_code is None
                               else jnp.asarray(control_code, jnp.int32))
@@ -119,17 +147,38 @@ class FleetService:
         else:
             self._backlog_cap = jnp.asarray(max_backlog, jnp.float32)
 
+        if fault_plan is not None:
+            fault_plan = FaultPlan(*(np.asarray(x, np.float32)
+                                     for x in fault_plan))
+            for name, leaf in zip(FaultPlan._fields, fault_plan):
+                if leaf.ndim != 2 or leaf.shape[1] != n_ost:
+                    raise ValueError(
+                        f"fault_plan.{name} must be [W, n_ost={n_ost}]; "
+                        f"got {leaf.shape}")
+        self._fault_plan = fault_plan
+        # host-side liveness shadow for the fault-transition checkpoint
+        # trigger (which OSTs were up at the end of the last step)
+        self._up_prev = np.ones(n_ost, bool)
+        #: windows advanced through the watchdog loss-mask path
+        self.lost_windows = 0
+        #: total ingest retries used across the service lifetime
+        self.retry_count = 0
+
         # the arrays stay *traced* jit arguments (not baked constants) so
         # the compiled step is the same program the offline scan body runs
-        # -- constant folding must not get a chance to fork the numerics
+        # -- constant folding must not get a chance to fork the numerics.
+        # ``faults_w=None`` vs a FaultPlan row are different pytree
+        # structures, so jit keeps the legacy fault-free program and the
+        # faulted program as separate traces automatically.
         def step_fn(nodes, cap_tick, backlog_cap, control_code, carry,
-                    rates_w):
+                    rates_w, faults_w):
             ctx = PolicyContext(
                 nodes=nodes, cap_w=cap_tick * cfg.window_ticks,
                 u_max=cfg.u_max, integer_tokens=cfg.integer_tokens,
                 alloc_backend=cfg.alloc_backend, control_code=control_code)
             return window_step(cfg, self._policy, ctx, cap_tick,
-                               backlog_cap, carry, rates_w)
+                               backlog_cap, carry, rates_w,
+                               faults_w=faults_w)
 
         # donated carry: the previous window's buffers are dead the moment
         # the step returns, so XLA reuses them in place -- the long-lived
@@ -149,33 +198,64 @@ class FleetService:
 
     # ------------------------------------------------------------ stepping
 
-    def step(self, rates_w) -> Optional[WindowOut]:
+    def step(self, rates_w, faults_w: Optional[FaultPlan] = None
+             ) -> Optional[WindowOut]:
         """Advance one observation window.
 
         Args:
           rates_w: [window_ticks, O, J] client issue attempts observed
             this window (what the OSTs saw arrive).
+          faults_w: optional fault row ([O] leaves) for this window;
+            defaults to the constructor ``fault_plan``'s row for the
+            current window index (None when the service has no plan).
 
         Returns the window's ``WindowOut`` (served/demand/alloc/record,
         each [O, J]) in trajectory mode, None in streaming mode (the
         accumulated ``StreamStats`` are at ``self.stats``).
+
+        With ``checkpoint_on_fault`` and a ``checkpoint_dir``, a fault
+        row that takes a previously-up OST down triggers ``save()``
+        *before* the step, so restore replays from the disturbance.
         """
         rates_w = jnp.asarray(rates_w, jnp.float32)
         if rates_w.shape != (self.cfg.window_ticks, self.n_ost, self.n_jobs):
             raise ValueError(
                 f"rates_w must be [window_ticks={self.cfg.window_ticks}, "
                 f"O={self.n_ost}, J={self.n_jobs}]; got {rates_w.shape}")
+        if faults_w is None and self._fault_plan is not None:
+            faults_w = self._fault_plan.row(self.window)
+        if faults_w is not None:
+            faults_w = FaultPlan(*(jnp.asarray(x, jnp.float32)
+                                   for x in faults_w))
+            for name, leaf in zip(FaultPlan._fields, faults_w):
+                if leaf.shape != (self.n_ost,):
+                    raise ValueError(
+                        f"faults_w.{name} must be a fault *row* "
+                        f"[n_ost={self.n_ost}]; got {leaf.shape}")
+            up_now = np.asarray(faults_w.up) > 0
+            if (self._up_prev & ~up_now).any() and self.checkpoint_on_fault \
+                    and self.checkpoint_dir is not None:
+                self.save()
+            self._up_prev = up_now
+        else:
+            self._up_prev = np.ones(self.n_ost, bool)
         self._carry, out = self._step(
             self._nodes, self._cap_tick, self._backlog_cap,
-            self._control_code, self._carry, rates_w)
+            self._control_code, self._carry, rates_w, faults_w)
         return out
 
-    def run(self, rates, n_windows: Optional[int] = None):
+    def run(self, rates, n_windows: Optional[int] = None,
+            fault_plan: Optional[FaultPlan] = None):
         """Drive the service from a materialized [T, O, J] trace (tiled
         periodically past its own length when ``n_windows`` asks for
         more), collecting outputs into the same result types
         ``simulate_fleet`` returns.  Mainly a convenience for demos and
-        the online==offline oracle tests."""
+        the online==offline oracle tests.
+
+        ``fault_plan`` must cover the run horizon exactly ([n_windows, O]
+        leaves, row ``w`` consumed at window ``w``) -- the same absolute
+        fault-timeline semantics ``simulate_fleet`` uses, so the bitwise
+        online==offline oracle extends to faulted runs."""
         rates = np.asarray(rates, np.float32)
         wt = self.cfg.window_ticks
         trace_windows = rates.shape[0] // wt
@@ -184,10 +264,16 @@ class FleetService:
                 f"trace covers {rates.shape[0]} ticks < one {wt}-tick window")
         if n_windows is None:
             n_windows = trace_windows
+        if fault_plan is not None and fault_plan.n_windows != n_windows:
+            raise ValueError(
+                f"fault_plan covers {fault_plan.n_windows} windows but the "
+                f"run is {n_windows} windows (the plan is never tiled here)")
         outs = []
         for w in range(n_windows):
             s = (w % trace_windows) * wt
-            out = self.step(rates[s:s + wt])
+            out = self.step(rates[s:s + wt],
+                            faults_w=(None if fault_plan is None
+                                      else fault_plan.row(w)))
             if out is not None:
                 outs.append(out)
         window_seconds = wt * self.cfg.tick_seconds
@@ -199,6 +285,73 @@ class FleetService:
                            alloc=stack.alloc, record=stack.record,
                            queue_final=self.queue,
                            window_seconds=window_seconds)
+
+    def ingest(self, fetch: Callable, faults_w: Optional[FaultPlan] = None,
+               retries: int = 3, backoff_s: float = 0.05,
+               deadline_s: Optional[float] = None,
+               sleep: Callable = time.sleep,
+               clock: Callable = time.monotonic) -> IngestResult:
+        """One production control round: fetch this window's observation
+        with bounded retry + exponential backoff, then step -- and if
+        delivery ultimately fails, advance through the loss-mask path
+        instead of stalling the loop.
+
+        Args:
+          fetch: zero-arg callable returning this window's
+            ``[window_ticks, O, J]`` rates, or None / raising on a failed
+            delivery attempt (a dropped stats RPC, a timed-out
+            collector).
+          faults_w: optional fault row forwarded to ``step`` (defaults to
+            the constructor plan's row, like ``step``).
+          retries: attempts after the first (so ``retries + 1`` fetches
+            max).
+          backoff_s: first retry delay; doubles per retry (bounded
+            exponential backoff).
+          deadline_s: optional missed-deadline watchdog: once this much
+            wall time has elapsed, no further retry is attempted even if
+            the retry budget remains -- the controller must re-allocate
+            every 100 ms window, so a late observation is a lost
+            observation.
+          sleep/clock: injectable for deterministic tests.
+
+        On delivery failure the service steps anyway with zero observed
+        arrivals and the window's ``telem_ok`` mask forced to zero: the
+        engine keeps draining standing queues at full (fault-adjusted)
+        capacity while the policy holds its last delivered observation --
+        graceful degradation, not a stalled control plane.  Counted in
+        ``self.lost_windows`` / ``self.retry_count``.
+        """
+        if faults_w is None and self._fault_plan is not None:
+            faults_w = self._fault_plan.row(self.window)
+        t0 = clock()
+        rates_w, attempts = None, 0
+        while rates_w is None and attempts <= retries:
+            try:
+                attempts += 1
+                rates_w = fetch()
+            except Exception:
+                rates_w = None
+            if rates_w is not None:
+                break
+            if attempts > retries:
+                break
+            delay = backoff_s * (2.0 ** (attempts - 1))
+            if deadline_s is not None:
+                remaining = deadline_s - (clock() - t0)
+                if remaining <= 0:
+                    break                      # watchdog: deadline missed
+                delay = min(delay, remaining)
+            sleep(delay)
+        self.retry_count += attempts - 1
+        if rates_w is not None:
+            out = self.step(rates_w, faults_w=faults_w)
+            return IngestResult(out=out, delivered=True, attempts=attempts)
+        self.lost_windows += 1
+        zeros = np.zeros((self.cfg.window_ticks, self.n_ost, self.n_jobs),
+                         np.float32)
+        lost = lost_telemetry_row(self.n_ost, base=faults_w)
+        out = self.step(zeros, faults_w=lost)
+        return IngestResult(out=out, delivered=False, attempts=attempts)
 
     # ------------------------------------------------------------- state
 
@@ -256,12 +409,55 @@ class FleetService:
         """Replace the live carry with a saved one (latest by default);
         returns the restored checkpoint's step.  The service must have
         been built with the same cfg/shapes/policy that wrote the
-        checkpoint -- leaves are matched by pytree path and shape."""
+        checkpoint -- leaves are matched by pytree path and shape, and
+        the common config mismatches (different fleet shape, different
+        telemetry mode, different control policy) are validated up front
+        with errors that name the mismatch instead of surfacing as a
+        cryptic leaf-level pytree error."""
         from repro import checkpoint
 
         if self.checkpoint_dir is None:
             raise ValueError("FleetService built without checkpoint_dir")
+        self._validate_checkpoint_meta(
+            checkpoint.checkpoint_meta(self.checkpoint_dir, step=step))
         carry, step = checkpoint.restore_checkpoint(
             self.checkpoint_dir, self._carry, step=step)
         self._carry = carry
         return step
+
+    def _validate_checkpoint_meta(self, meta: dict):
+        """Fail fast, by name, on checkpoints this service cannot host."""
+        by_path = {m["path"]: tuple(m["shape"]) for m in meta["leaves"]}
+        q = by_path.get(".queue")
+        if q is None:
+            raise ValueError(
+                f"checkpoint step {meta['step']} has no '.queue' leaf -- "
+                "not a FleetService carry checkpoint")
+        if q != (self.n_ost, self.n_jobs):
+            raise ValueError(
+                f"checkpoint step {meta['step']} was written for a fleet "
+                f"of (n_ost, n_jobs)={q}; this service is "
+                f"({self.n_ost}, {self.n_jobs}) -- restore needs the "
+                "same fleet shape the checkpoint was saved from")
+        saved_streaming = any(p.startswith(".stats") for p in by_path)
+        live_streaming = self.cfg.telemetry == "streaming"
+        if saved_streaming != live_streaming:
+            saved = "streaming" if saved_streaming else "trajectory"
+            live = "streaming" if live_streaming else "trajectory"
+            raise ValueError(
+                f"checkpoint step {meta['step']} was written with "
+                f"telemetry={saved!r} but this service runs "
+                f"telemetry={live!r} -- the StreamStats carry cannot be "
+                "invented or discarded on restore")
+        flat, _ = jax.tree_util.tree_flatten_with_path(self._carry)
+        live_pstate = sorted(
+            jax.tree_util.keystr(p) for p, _ in flat
+            if jax.tree_util.keystr(p).startswith(".policy_state"))
+        saved_pstate = sorted(
+            p for p in by_path if p.startswith(".policy_state"))
+        if live_pstate != saved_pstate:
+            raise ValueError(
+                f"checkpoint step {meta['step']} was written for a "
+                "different control policy: its policy_state leaves are "
+                f"{saved_pstate} but cfg.control={self.cfg.control!r} "
+                f"carries {live_pstate}")

@@ -88,6 +88,7 @@ from repro.core.policies import (
     get_policy,
 )
 from repro.storage import telemetry
+from repro.storage.faults import FaultPlan
 from repro.storage.telemetry import StreamStats
 
 _EPS = 1e-9
@@ -222,6 +223,21 @@ def _serve_tick(queue, vol_left, budget, rate_t, backlog_cap, capacity):
 # ------------------------------------------------------- the window engine
 
 
+class HeldObs(NamedTuple):
+    """The last observation the controller actually received ([O, J]).
+
+    The last-observation-hold state for telemetry loss: when a window's
+    fault row says ``telem_ok == 0`` for an OST, the policy's ``step`` is
+    fed this row instead of the fresh window observation, and the held row
+    stays put until a delivered window replaces it (consecutive losses
+    keep holding the same observation).
+    """
+
+    served: jnp.ndarray
+    demand: jnp.ndarray
+    alloc: jnp.ndarray
+
+
 class WindowCarry(NamedTuple):
     """The complete cross-window state of the window engine.
 
@@ -232,7 +248,9 @@ class WindowCarry(NamedTuple):
     contract -- ``repro/checkpoint`` keys saved leaves by pytree path
     (``.queue``, ``.stats.served_sum``, ...), so renaming a field silently
     orphans every existing checkpoint (pinned by
-    ``tests/test_service.py::test_carry_checkpoint_paths_are_stable``).
+    ``tests/test_service.py::test_carry_checkpoint_paths_are_stable``);
+    extend by *appending* fields (as ``held`` was), never by renaming or
+    reordering.
     """
 
     window: jnp.ndarray        # () int32: windows completed so far
@@ -241,6 +259,8 @@ class WindowCarry(NamedTuple):
     policy_state: Any          # policy pytree (shape fixed by cfg.control)
     alloc: jnp.ndarray         # [O, J] allocation applied next window
     stats: Any                 # StreamStats (streaming) | () (trajectory)
+    held: HeldObs              # last *delivered* observation (lost-telemetry
+                               #   hold state; fault injection, DESIGN.md 11)
 
 
 class WindowOut(NamedTuple):
@@ -259,14 +279,21 @@ def init_carry(cfg: FleetConfig, policy: ControlPolicy, ctx: PolicyContext,
     n_ost, n_jobs = ctx.nodes.shape
     if cfg.telemetry not in ("trajectory", "streaming"):
         raise ValueError(f"unknown telemetry mode: {cfg.telemetry!r}")
+    def zoj():
+        # fresh buffer per leaf (donated carries must not alias leaves)
+        return jnp.zeros((n_ost, n_jobs), jnp.float32)
+
     return WindowCarry(
         window=jnp.int32(0),
-        queue=jnp.zeros((n_ost, n_jobs), jnp.float32),
+        queue=zoj(),
         vol_left=jnp.asarray(volume, jnp.float32),
         policy_state=policy.init_state(ctx),
         alloc=policy.init_alloc(ctx),
         stats=(telemetry.init_stats(n_ost, n_jobs)
                if cfg.telemetry == "streaming" else ()),
+        # init_alloc called again (not aliased to .alloc), see above
+        held=HeldObs(served=zoj(), demand=zoj(),
+                     alloc=policy.init_alloc(ctx)),
     )
 
 
@@ -297,7 +324,7 @@ def _serve_window(cfg: FleetConfig, queue, vol_left, budget0, rates_w,
 
 def window_step(cfg: FleetConfig, policy: ControlPolicy, ctx: PolicyContext,
                 cap_tick, backlog_cap, carry: WindowCarry, rates_w,
-                axis_name: Optional[str] = None):
+                axis_name: Optional[str] = None, faults_w=None):
     """One observation window: gate, serve every tick, observe, re-allocate.
 
     THE per-window body -- the offline ``lax.scan`` in ``_run_windows`` and
@@ -312,35 +339,78 @@ def window_step(cfg: FleetConfig, policy: ControlPolicy, ctx: PolicyContext,
         ``init_carry``).
       rates_w: [window_ticks, O, J] this window's client issue attempts.
       axis_name: mesh axis when running inside ``shard_map``.
+      faults_w: optional ``faults.FaultPlan`` row ([O] leaves) -- this
+        window's fault state (see below).  None means no fault machinery
+        in the trace at all (the legacy program, bit for bit).
+
+    Fault semantics (DESIGN.md section 11).  All three effects are
+    row-local, so the sharded engine needs no new mesh crossings:
+
+    * down (``up == 0``): the OST serves nothing and its clients issue
+      nothing (their RPCs have nowhere to land), so queue and remaining
+      volumes freeze -- volume conservation holds through the outage.
+    * droop: ``cap_scale`` multiplies the window's effective service rate.
+    * lost telemetry (``telem_ok == 0``): the engine serves normally but
+      the policy's ``step`` sees the previously *delivered* observation
+      (``carry.held``, explicit last-observation-hold).  Capacity and
+      liveness are NOT held: AdapTBF's controller runs *on* the OST
+      (decentralized), so it always knows its own hardware state --
+      what rides (droppable) RPCs is the client demand statistics.
+
+    The policy sees the *effective* capacity in ``ctx.cap_w`` and the
+    liveness column in ``obs.up``; streaming telemetry folds utilization
+    against effective capacity and advances the row-local fault counters.
 
     Returns ``(carry', out)`` with ``out`` a ``WindowOut`` in trajectory
     mode and ``None`` in streaming mode (the stats live in the carry).
     """
-    budget0 = policy.gate(carry.alloc, ctx)
+    if faults_w is None:
+        ctx_w, cap_tick_w, up_col = ctx, cap_tick, None
+    else:
+        # effective service rate: down kills it, droop scales it.  With an
+        # all-ones row every op below is an IEEE identity, so a no-fault
+        # plan is bitwise the no-plan program.
+        cap_tick_w = cap_tick * faults_w.up * faults_w.cap_scale
+        rates_w = rates_w * faults_w.up[None, :, None]
+        ctx_w = ctx._replace(cap_w=cap_tick_w * cfg.window_ticks)
+        up_col = faults_w.up[:, None]
+    budget0 = policy.gate(carry.alloc, ctx_w)
     queue, vol_left, served_w = _serve_window(
         cfg, carry.queue, carry.vol_left, budget0, rates_w, backlog_cap,
-        cap_tick)
+        cap_tick_w)
     demand = served_w + queue
+    if faults_w is None:
+        obs_served, obs_demand, obs_alloc = served_w, demand, carry.alloc
+    else:
+        delivered = faults_w.telem_ok[:, None] > 0
+        obs_served = jnp.where(delivered, served_w, carry.held.served)
+        obs_demand = jnp.where(delivered, demand, carry.held.demand)
+        obs_alloc = jnp.where(delivered, carry.alloc, carry.held.alloc)
     pstate, alloc_next = policy.step(
         carry.policy_state,
-        WindowObs(served=served_w, demand=demand, alloc=carry.alloc), ctx)
+        WindowObs(served=obs_served, demand=obs_demand, alloc=obs_alloc,
+                  up=up_col), ctx_w)
     if cfg.telemetry == "streaming":
         stats = telemetry.update_stats(carry.stats, served_w, demand,
-                                       carry.alloc, ctx.cap_w,
-                                       axis_name=axis_name)
+                                       carry.alloc, ctx_w.cap_w,
+                                       axis_name=axis_name,
+                                       faults_w=faults_w)
         out = None
     else:
         stats = carry.stats
         out = WindowOut(served=served_w, demand=demand, alloc=carry.alloc,
-                        record=policy.record(pstate, ctx))
+                        record=policy.record(pstate, ctx_w))
     return WindowCarry(window=carry.window + 1, queue=queue,
                        vol_left=vol_left, policy_state=pstate,
-                       alloc=alloc_next, stats=stats), out
+                       alloc=alloc_next, stats=stats,
+                       held=HeldObs(served=obs_served, demand=obs_demand,
+                                    alloc=obs_alloc)), out
 
 
 def _run_windows(cfg: FleetConfig, policy: ControlPolicy, nodes, rates,
                  volume, cap_tick, backlog_cap, control_code,
-                 n_windows: Optional[int], axis_name: Optional[str] = None):
+                 n_windows: Optional[int], axis_name: Optional[str] = None,
+                 fault_plan: Optional[FaultPlan] = None):
     """The single window loop behind both entry points.
 
     nodes/volume/backlog_cap: [O, J]; rates: [T, O, J]; cap_tick: [O].
@@ -351,6 +421,12 @@ def _run_windows(cfg: FleetConfig, policy: ControlPolicy, nodes, rates,
     ``shard_map`` (``partition="ost_shard"``): every array above is then
     the *local* OST shard and the only cross-device op is the streaming
     busy-flag psum (``telemetry.update_stats``).
+
+    ``fault_plan`` (optional, [W, O] leaves) must cover the *run* horizon
+    exactly -- one row per executed window.  Unlike the rate trace it is
+    never tiled: on a tiled horizon the demand repeats but the fault
+    timeline stays absolute, which is the useful semantics (an outage at
+    window 1500 of a periodic trace).
 
     Returns ``(queue_final, outs)`` where ``outs`` is the per-window
     (served, demand, alloc, record) stack in trajectory mode or the final
@@ -364,6 +440,15 @@ def _run_windows(cfg: FleetConfig, policy: ControlPolicy, nodes, rates,
     if n_windows is None:
         n_windows = trace_windows
     tiled = n_windows != trace_windows
+    if fault_plan is not None:
+        fault_plan = jax.tree.map(
+            lambda x: jnp.asarray(x, jnp.float32), fault_plan)
+        for name, leaf in zip(FaultPlan._fields, fault_plan):
+            if leaf.shape != (n_windows, n_ost):
+                raise ValueError(
+                    f"fault_plan.{name} must be [n_windows={n_windows}, "
+                    f"n_ost={n_ost}]; got {leaf.shape} (the plan covers "
+                    "the run horizon, one row per executed window)")
     trace = rates[: trace_windows * cfg.window_ticks].reshape(
         trace_windows, cfg.window_ticks, n_ost, n_jobs)
     cap_w = cap_tick * cfg.window_ticks
@@ -373,22 +458,24 @@ def _run_windows(cfg: FleetConfig, policy: ControlPolicy, nodes, rates,
         control_code=control_code)
     streaming = cfg.telemetry == "streaming"
 
-    def window_fn(carry, rates_w):
+    def window_fn(carry, xs_w):
+        rates_w, faults_w = xs_w
         if tiled:
             rates_w = jax.lax.dynamic_index_in_dim(
                 trace, jnp.mod(carry.window, trace_windows), keepdims=False)
         return window_step(cfg, policy, ctx, cap_tick, backlog_cap, carry,
-                           rates_w, axis_name=axis_name)
+                           rates_w, axis_name=axis_name, faults_w=faults_w)
 
     carry0 = init_carry(cfg, policy, ctx, volume)
-    xs = None if tiled else trace
+    xs = (None if tiled else trace, fault_plan)
     carry, outs = jax.lax.scan(window_fn, carry0, xs, length=n_windows)
     return carry.queue, (carry.stats if streaming else outs)
 
 
 def _run_windows_sharded(cfg: FleetConfig, policy: ControlPolicy, nodes,
                          rates, volume, cap_tick, backlog_cap, control_code,
-                         n_windows: Optional[int]):
+                         n_windows: Optional[int],
+                         fault_plan: Optional[FaultPlan] = None):
     """``_run_windows`` under ``shard_map`` over a 1-D device mesh on the
     OST axis (``partition="ost_shard"``).
 
@@ -400,6 +487,11 @@ def _run_windows_sharded(cfg: FleetConfig, policy: ControlPolicy, nodes,
     per-window mesh crossing is the int32 busy-flag psum in streaming mode
     (exact -- see ``telemetry.update_stats``); trajectories stay sharded
     until the caller gathers them.
+
+    A ``fault_plan`` shards ``P(None, "ost")`` like every other piece of
+    row state -- each device consumes only its own OSTs' fault rows, so
+    fault injection adds **no** mesh crossings and the bitwise guarantee
+    extends to faulted runs (``tests/test_faults.py``).
     """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
@@ -415,10 +507,13 @@ def _run_windows_sharded(cfg: FleetConfig, policy: ControlPolicy, nodes,
             f"mesh size ({n_dev} devices); pad the fleet or force a "
             "compatible device count (--xla_force_host_platform_device_count)")
 
-    def body(nodes, rates, volume, cap_tick, backlog_cap, *maybe_code):
-        code = maybe_code[0] if maybe_code else None
+    def body(nodes, rates, volume, cap_tick, backlog_cap, *rest):
+        rest = list(rest)
+        code = rest.pop(0) if control_code is not None else None
+        plan = rest.pop(0) if fault_plan is not None else None
         return _run_windows(cfg, policy, nodes, rates, volume, cap_tick,
-                            backlog_cap, code, n_windows, axis_name="ost")
+                            backlog_cap, code, n_windows, axis_name="ost",
+                            fault_plan=plan)
 
     oj = P("ost", None)
     in_specs = [oj, P(None, "ost", None), oj, P("ost"), oj]
@@ -426,6 +521,10 @@ def _run_windows_sharded(cfg: FleetConfig, policy: ControlPolicy, nodes,
     if control_code is not None:
         in_specs.append(P())
         args.append(control_code)
+    if fault_plan is not None:
+        in_specs.append(FaultPlan(*(P(None, "ost"),) * 3))
+        args.append(jax.tree.map(
+            lambda x: jnp.asarray(x, jnp.float32), fault_plan))
     if cfg.telemetry == "streaming":
         outs_specs = telemetry.stats_pspecs("ost")
     else:
@@ -437,14 +536,16 @@ def _run_windows_sharded(cfg: FleetConfig, policy: ControlPolicy, nodes,
 
 def _dispatch_windows(cfg: FleetConfig, policy: ControlPolicy, nodes, rates,
                       volume, cap_tick, backlog_cap, control_code,
-                      n_windows: Optional[int]):
+                      n_windows: Optional[int],
+                      fault_plan: Optional[FaultPlan] = None):
     if cfg.partition == "ost_shard":
         return _run_windows_sharded(cfg, policy, nodes, rates, volume,
                                     cap_tick, backlog_cap, control_code,
-                                    n_windows)
+                                    n_windows, fault_plan=fault_plan)
     if cfg.partition == "none":
         return _run_windows(cfg, policy, nodes, rates, volume, cap_tick,
-                            backlog_cap, control_code, n_windows)
+                            backlog_cap, control_code, n_windows,
+                            fault_plan=fault_plan)
     raise ValueError(f"unknown partition: {cfg.partition!r}")
 
 
@@ -523,6 +624,7 @@ def simulate_fleet(
     max_backlog: Optional[jnp.ndarray] = None,
     control_code: Optional[jnp.ndarray] = None,
     n_windows: Optional[int] = None,
+    fault_plan: Optional[FaultPlan] = None,
 ) -> FleetResult:
     """Simulate ``n_ost`` storage targets with striped client demand.
 
@@ -543,6 +645,13 @@ def simulate_fleet(
         program sweep scenarios x policies under vmap.
       n_windows: optional horizon override; the rate trace is indexed
         periodically beyond its own length (pair with streaming telemetry).
+      fault_plan: optional ``faults.FaultPlan`` ([n_windows, O] leaves,
+        one row per *executed* window -- never tiled): OST outages freeze
+        queues/volumes, capacity droop scales service, lost-telemetry
+        windows hold the controller's previous observation (DESIGN.md
+        section 11).  A traced pytree argument like ``rates``: plans vary
+        freely without recompilation, and ``None`` keeps the legacy
+        fault-free program (a separate trace with zero fault overhead).
 
     Returns:
       FleetResult with [n_windows, O, J] trajectories, or StreamResult when
@@ -569,7 +678,8 @@ def simulate_fleet(
 
     queue, outs = _dispatch_windows(
         cfg, policy, nodes, jnp.asarray(issue_rate, jnp.float32), volume,
-        cap_tick, backlog_cap, control_code, n_windows)
+        cap_tick, backlog_cap, control_code, n_windows,
+        fault_plan=fault_plan)
     window_seconds = cfg.window_ticks * cfg.tick_seconds
     if cfg.telemetry == "streaming":
         return StreamResult(stats=outs, queue_final=queue,

@@ -95,6 +95,11 @@ class StreamStats(NamedTuple):
     lag_hist: jnp.ndarray       # [O, NBINS] log-spaced backlog histogram
     last_served: jnp.ndarray    # [O, J] int32 last window with service (-1)
     comp: StreamComp            # Kahan compensation for the float sums
+    # fault counters (appended fields -- checkpoint paths must be stable;
+    # all three row-local [O] int32, zero outside fault-injected runs)
+    down_windows: jnp.ndarray   # [O] windows the OST spent down
+    droop_windows: jnp.ndarray  # [O] windows up but capacity-degraded
+    obs_lost: jnp.ndarray       # [O] windows whose observation was lost
 
 
 def init_stats(n_ost: int, n_jobs: int) -> StreamStats:
@@ -116,6 +121,9 @@ def init_stats(n_ost: int, n_jobs: int) -> StreamStats:
             served_sum=zoj, served_sumsq=zoj, demand_sum=zoj,
             demand_sumsq=zoj, alloc_sum=zoj, alloc_sumsq=zoj,
             util_sum=zo, lag_sum=zo, lag_sumsq=zo, lag_hist=zh),
+        down_windows=jnp.zeros((n_ost,), jnp.int32),
+        droop_windows=jnp.zeros((n_ost,), jnp.int32),
+        obs_lost=jnp.zeros((n_ost,), jnp.int32),
     )
 
 
@@ -158,6 +166,7 @@ def stats_pspecs(axis: str):
             served_sum=oj, served_sumsq=oj, demand_sum=oj, demand_sumsq=oj,
             alloc_sum=oj, alloc_sumsq=oj, util_sum=o,
             lag_sum=o, lag_sumsq=o, lag_hist=oj),
+        down_windows=o, droop_windows=o, obs_lost=o,
     )
 
 
@@ -184,18 +193,26 @@ def bin_upper_edge(b) -> float:
 
 
 def update_stats(stats: StreamStats, served_w, demand, alloc, cap_w,
-                 axis_name: Optional[str] = None) -> StreamStats:
+                 axis_name: Optional[str] = None,
+                 faults_w=None) -> StreamStats:
     """Fold one window's [O, J] observation into the carry.
 
     Mirrors the post-hoc definitions in ``storage/metrics.py`` exactly:
     per-window utilization is ``served.sum(jobs) / cap_w``, a window is
     *busy* when any OST served anything, and the allocation moments mask
-    unruled (infinite) entries.
+    unruled (infinite) entries.  Under fault injection ``cap_w`` is the
+    window's *effective* capacity (zero while down), so ``util_sum``
+    accumulates utilization of what the hardware could actually serve.
 
     Every update touches only its own OST row, except the busy flag: with
     ``axis_name`` set (inside ``shard_map``) the int32 busy-OST count is
     ``psum``-med across the mesh so the flag matches the unsharded run bit
     for bit (integer addition cannot reorder-drift).
+
+    ``faults_w`` (optional ``faults.FaultPlan`` row, [O] leaves) advances
+    the row-local fault counters: windows down, windows up-but-degraded,
+    observations lost.  ``None`` leaves them untouched -- a fault-free
+    run's stats are bitwise those of the pre-fault engine.
     """
     n_ost = served_w.shape[0]
     util_o = jnp.sum(served_w, axis=-1) / jnp.maximum(cap_w, 1e-12)
@@ -224,6 +241,14 @@ def update_stats(stats: StreamStats, served_w, demand, alloc, cap_w,
     lag_sumsq, c_lag_sumsq = _kahan(
         stats.lag_sumsq, c.lag_sumsq, jnp.sum(lag * lag, axis=-1))
     lag_hist, c_lag_hist = _kahan(stats.lag_hist, c.lag_hist, window_hist)
+    down_windows, droop_windows, obs_lost = (
+        stats.down_windows, stats.droop_windows, stats.obs_lost)
+    if faults_w is not None:
+        down = faults_w.up <= 0.0
+        down_windows = down_windows + down.astype(jnp.int32)
+        droop_windows = droop_windows + (
+            (~down) & (faults_w.cap_scale < 1.0)).astype(jnp.int32)
+        obs_lost = obs_lost + (faults_w.telem_ok <= 0.0).astype(jnp.int32)
     return StreamStats(
         windows=stats.windows + 1,
         served_sum=served_sum, served_sumsq=served_sumsq,
@@ -243,6 +268,8 @@ def update_stats(stats: StreamStats, served_w, demand, alloc, cap_w,
             alloc_sum=c_alloc_sum, alloc_sumsq=c_alloc_sumsq,
             util_sum=c_util_sum, lag_sum=c_lag_sum, lag_sumsq=c_lag_sumsq,
             lag_hist=c_lag_hist),
+        down_windows=down_windows, droop_windows=droop_windows,
+        obs_lost=obs_lost,
     )
 
 
@@ -265,4 +292,7 @@ def squeeze_stats(stats: StreamStats) -> StreamStats:
             alloc_sum=c.alloc_sum[0], alloc_sumsq=c.alloc_sumsq[0],
             util_sum=c.util_sum[0], lag_sum=c.lag_sum[0],
             lag_sumsq=c.lag_sumsq[0], lag_hist=c.lag_hist[0]),
+        down_windows=stats.down_windows[0],
+        droop_windows=stats.droop_windows[0],
+        obs_lost=stats.obs_lost[0],
     )

@@ -1,0 +1,418 @@
+"""The chaos oracle suite: fault injection x graceful degradation.
+
+``storage/faults.py`` makes OST outages, capacity droop, and telemetry
+loss first-class traced inputs to the window engine.  These tests are the
+proof obligations that come with that:
+
+* **chaos invariants** -- under random fault plans, for every registered
+  policy and both telemetry modes, the engine still upholds token
+  conservation, non-negativity, capacity bounds, and volume conservation
+  (reusing ``test_invariants``' checkers verbatim), *plus* the fault
+  semantics themselves: a down OST serves nothing and its queue freezes,
+  nothing moves that was issued into a down window, and no policy ever
+  emits NaN/Inf from a zeroed capacity;
+* **identity** -- an all-ones plan is bitwise the no-plan program, and a
+  horizon-constant droop is bitwise a smaller static capacity;
+* **sharding** -- fault rows are row-local, so fault-injected runs stay
+  bitwise sharded==unsharded (real device boundaries on the forced
+  2-/4-device CI legs);
+* **online==offline** -- the service consuming fault rows window by
+  window equals the offline scan bitwise, including a save -> kill ->
+  restore landing *inside* an OST outage;
+* **last-observation-hold** -- a lost-telemetry window feeds the policy
+  its previous delivered observation, verified by alloc freeze.
+
+Hypothesis widens the fault-plan knobs when available; fixed-seed twins
+keep every family alive on the no-hypothesis CI leg.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from conftest import HAVE_HYPOTHESIS, given, settings, st
+from test_invariants import (
+    N_JOBS,
+    WINDOW_TICKS,
+    _build_case,
+    _check_invariants,
+)
+
+from repro.storage import (
+    FleetConfig,
+    FleetService,
+    faults,
+    list_policies,
+    simulate_fleet,
+)
+from repro.storage.faults import FaultPlan
+
+N_WINDOWS = 8
+T_TICKS = N_WINDOWS * WINDOW_TICKS
+
+
+def _chaos_case(o: int, seed: int):
+    """A test_invariants fleet draw sized to this suite's horizon."""
+    rng = np.random.default_rng(seed)
+    nodes, rates, volume, caps, backlog = _build_case(o, seed)
+    reps = -(-T_TICKS // rates.shape[0])
+    rates = np.tile(rates, (reps, 1, 1))[:T_TICKS]
+    return nodes, rates, volume, caps, backlog
+
+
+def _run_faulted(control, case, plan, telemetry="trajectory"):
+    nodes, rates, volume, caps, backlog = case
+    cfg = FleetConfig(control=control, window_ticks=WINDOW_TICKS,
+                      telemetry=telemetry)
+    res = simulate_fleet(cfg, jnp.asarray(nodes), jnp.asarray(rates),
+                         jnp.asarray(volume), jnp.asarray(caps),
+                         jnp.asarray(backlog), fault_plan=plan)
+    return cfg, res
+
+
+def _check_fault_invariants(control, plan, case, res):
+    """The fault-specific obligations on top of the classic invariants."""
+    nodes, rates, volume, caps, backlog = case
+    tag = f"{control} faulted"
+    served = np.asarray(res.served, np.float64)      # [W, O, J]
+    demand = np.asarray(res.demand, np.float64)
+    alloc = np.asarray(res.alloc, np.float64)
+    record = np.asarray(res.record, np.float64)
+    up = np.asarray(plan.up) > 0                     # [W, O]
+
+    # no NaN anywhere; Inf only where it means "unruled"
+    for name, arr in (("served", served), ("demand", demand),
+                      ("record", record)):
+        assert np.isfinite(arr).all(), f"{tag}: non-finite {name}"
+    assert not np.isnan(alloc).any(), f"{tag}: NaN allocation"
+
+    # a down OST serves nothing...
+    assert (served[~up] == 0).all(), f"{tag}: a down OST served RPCs"
+    # ...and its standing queue freezes (nothing issued, nothing drained).
+    # Reconstructing the queue as demand - served re-rounds the engine's
+    # own f32 `demand = served + queue`, so the comparison is allclose at
+    # f32 epsilon, not bitwise (the exact-zero service check above is).
+    queue_w = demand - served                        # queue at window end
+    for w, o in zip(*np.nonzero(~up)):
+        prev = queue_w[w - 1, o] if w > 0 else np.zeros(served.shape[-1])
+        np.testing.assert_allclose(
+            queue_w[w, o], prev, rtol=1e-6, atol=1e-5,
+            err_msg=f"{tag}: queue moved through a down window (w={w} o={o})")
+
+    # volume conservation against what clients could actually land: RPCs
+    # aimed at a down window never entered the queue
+    rates_w = rates.astype(np.float64).reshape(
+        N_WINDOWS, WINDOW_TICKS, *rates.shape[1:])
+    offered_up = (rates_w * up[:, None, :, None]).sum(axis=(0, 1))
+    moved = served.sum(axis=0) + np.asarray(res.queue_final, np.float64)
+    assert (moved <= offered_up + 1e-2).all(), \
+        f"{tag}: more RPCs moved than were issued into up windows"
+
+    # adaptbf: the ledger of a down OST is reclaimed (pinned at zero)
+    if control == "adaptbf":
+        assert (record[~up] == 0).all(), \
+            f"{tag}: tokens stranded on a dead OST's ledger"
+
+
+def _check_chaos(control, telemetry, case, plan):
+    cfg, res = _run_faulted(control, case, plan)
+    _check_invariants(control, cfg, case, res)
+    _check_fault_invariants(control, plan, case, res)
+    if telemetry == "streaming":
+        _, stream = _run_faulted(control, case, plan, telemetry="streaming")
+        s = stream.stats
+        for leaf in jax.tree.leaves(s):
+            assert not np.isnan(np.asarray(leaf)).any(), \
+                f"{control}: NaN in streaming stats"
+        np.testing.assert_array_equal(np.asarray(stream.queue_final),
+                                      np.asarray(res.queue_final))
+        # the row-local fault counters match the plan exactly
+        np.testing.assert_array_equal(
+            np.asarray(s.down_windows),
+            (np.asarray(plan.up) <= 0).sum(0).astype(np.int32))
+        np.testing.assert_array_equal(
+            np.asarray(s.droop_windows),
+            ((np.asarray(plan.up) > 0)
+             & (np.asarray(plan.cap_scale) < 1)).sum(0).astype(np.int32))
+        np.testing.assert_array_equal(
+            np.asarray(s.obs_lost),
+            (np.asarray(plan.telem_ok) <= 0).sum(0).astype(np.int32))
+
+
+# ------------------------------------------------------------ plan builders
+
+
+def test_random_fault_plan_is_deterministic_and_bounded():
+    a = faults.random_fault_plan(11, N_WINDOWS, 4, mtbf_windows=3,
+                                 mttr_windows=2, droop_frac=1.0, loss_p=0.4)
+    b = faults.random_fault_plan(11, N_WINDOWS, 4, mtbf_windows=3,
+                                 mttr_windows=2, droop_frac=1.0, loss_p=0.4)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+    assert a.up.shape == (N_WINDOWS, 4)
+    assert set(np.unique(a.up)) <= {0.0, 1.0}
+    assert set(np.unique(a.telem_ok)) <= {0.0, 1.0}
+    assert (a.cap_scale > 0).all() and (a.cap_scale <= 1).all()
+    c = faults.random_fault_plan(12, N_WINDOWS, 4, mtbf_windows=3,
+                                 mttr_windows=2, droop_frac=1.0, loss_p=0.4)
+    assert any(not np.array_equal(x, y) for x, y in zip(a, c))
+
+
+def test_outage_droop_compose_and_row():
+    out = faults.outage(6, 3, start=2, end=4, osts=[1])
+    assert out.up[1, 1] == 1.0 and out.up[2, 1] == 0.0 and out.up[4, 1] == 1.0
+    assert (out.up[:, [0, 2]] == 1.0).all()
+    dr = faults.droop(6, 3, start=0, end=6, scale=0.3, osts=[0])
+    both = faults.compose(out, dr)
+    assert both.cap_scale[0, 0] == np.float32(0.3)
+    assert both.up[2, 1] == 0.0
+    row = both.row(8)                     # tiles modularly: 8 % 6 == 2
+    assert row.up.shape == (3,) and row.up[1] == 0.0
+    lost = faults.lost_telemetry_row(3, base=row)
+    assert (lost.telem_ok == 0).all()
+    assert np.array_equal(lost.up, row.up)
+
+
+def test_all_ones_plan_is_bitwise_identity():
+    case = _chaos_case(2, seed=7)
+    nodes, rates, volume, caps, backlog = case
+    plan = faults.no_faults(N_WINDOWS, 2)
+    for control in ("adaptbf", "aimd"):
+        for telemetry in ("trajectory", "streaming"):
+            cfg = FleetConfig(control=control, window_ticks=WINDOW_TICKS,
+                              telemetry=telemetry)
+            base = simulate_fleet(cfg, nodes, rates, volume, caps, backlog)
+            faulted = simulate_fleet(cfg, nodes, rates, volume, caps,
+                                     backlog, fault_plan=plan)
+            for (p, a), b in zip(
+                    jax.tree_util.tree_flatten_with_path(base)[0],
+                    jax.tree.leaves(faulted)):
+                np.testing.assert_array_equal(
+                    np.asarray(a), np.asarray(b),
+                    err_msg=f"{control}/{telemetry}{jax.tree_util.keystr(p)}")
+
+
+def test_constant_droop_equals_static_degraded_capacity():
+    """A droop that never lifts IS a smaller capacity -- the equivalence
+    the saturation profile's refactor onto ``degraded_capacity`` rests
+    on, bitwise (same f32 multiply sequence in the engine)."""
+    case = _chaos_case(2, seed=3)
+    nodes, rates, volume, caps, backlog = case
+    scale = np.float32(0.4)
+    plan = faults.no_faults(N_WINDOWS, 2)
+    plan.cap_scale[:, 0] = scale
+    pre = caps.copy()
+    pre[0] = np.float32(caps[0] * np.float32(1.0)) * scale
+    cfg = FleetConfig(control="adaptbf", window_ticks=WINDOW_TICKS)
+    a = simulate_fleet(cfg, nodes, rates, volume, caps, backlog,
+                       fault_plan=plan)
+    b = simulate_fleet(cfg, nodes, rates, volume, pre, backlog)
+    for f in ("served", "demand", "alloc", "record", "queue_final"):
+        np.testing.assert_array_equal(np.asarray(getattr(a, f)),
+                                      np.asarray(getattr(b, f)), err_msg=f)
+
+
+def test_fault_plan_shape_is_validated():
+    case = _chaos_case(2, seed=5)
+    nodes, rates, volume, caps, backlog = case
+    cfg = FleetConfig(control="static", window_ticks=WINDOW_TICKS)
+    bad = faults.no_faults(N_WINDOWS + 1, 2)
+    with pytest.raises(ValueError, match="fault_plan.up"):
+        simulate_fleet(cfg, nodes, rates, volume, caps, backlog,
+                       fault_plan=bad)
+
+
+# --------------------------------------------------------- chaos invariants
+
+SEVERITIES = {
+    "rough": dict(mtbf_windows=4.0, mttr_windows=2.0, droop_frac=0.6,
+                  droop_scale=0.3, loss_p=0.15),
+    "brutal": dict(mtbf_windows=2.0, mttr_windows=3.0, droop_frac=1.0,
+                   droop_scale=0.15, loss_p=0.5),
+}
+
+
+@pytest.mark.parametrize("severity", sorted(SEVERITIES))
+@pytest.mark.parametrize("telemetry", ["trajectory", "streaming"])
+@pytest.mark.parametrize("control", list_policies())
+def test_chaos_invariants_fixed_case(control, telemetry, severity):
+    case = _chaos_case(2, seed=1234)
+    plan = faults.random_fault_plan(42, N_WINDOWS, 2,
+                                    **SEVERITIES[severity])
+    _check_chaos(control, telemetry, case, plan)
+
+
+if HAVE_HYPOTHESIS:
+
+    @st.composite
+    def chaos_draw(draw):
+        return (draw(st.sampled_from(list_policies())),
+                draw(st.sampled_from(["trajectory", "streaming"])),
+                draw(st.integers(0, 2**31 - 1)),
+                draw(st.floats(1.5, 50.0)),      # mtbf (windows)
+                draw(st.floats(1.0, 8.0)),       # mttr (windows)
+                draw(st.floats(0.0, 1.0)),       # droop_frac
+                draw(st.floats(0.1, 0.9)),       # droop_scale
+                draw(st.floats(0.0, 0.8)))       # loss_p
+else:  # pragma: no cover - placeholder so the decorator still applies
+
+    def chaos_draw():
+        return None
+
+
+@pytest.mark.property
+@settings(max_examples=8, deadline=None)
+@given(chaos_draw())
+def test_property_chaos_invariants(case):
+    control, telemetry, seed, mtbf, mttr, dfrac, dscale, loss = case
+    inputs = _chaos_case(2, seed=seed % 10_000)
+    plan = faults.random_fault_plan(seed, N_WINDOWS, 2, mtbf_windows=mtbf,
+                                    mttr_windows=mttr, droop_frac=dfrac,
+                                    droop_scale=dscale, loss_p=loss)
+    _check_chaos(control, telemetry, inputs, plan)
+
+
+# ---------------------------------------------------- last-observation-hold
+
+
+def test_lost_telemetry_holds_last_observation():
+    """With OST 0's telemetry lost from window k on, a stateless policy's
+    allocations for OST 0 freeze at the value computed from the last
+    delivered observation; the other OST keeps adapting."""
+    k = 3
+    case = _chaos_case(2, seed=13)
+    nodes, rates, volume, caps, backlog = case
+    plan = faults.no_faults(N_WINDOWS, 2)
+    plan.telem_ok[k:, 0] = 0.0
+    cfg = FleetConfig(control="static_wc", window_ticks=WINDOW_TICKS)
+    res = simulate_fleet(cfg, nodes, rates, volume, caps, backlog,
+                         fault_plan=plan)
+    alloc = np.asarray(res.alloc)                    # [W, O, J]
+    # alloc[w] was computed from window w-1's observation; window k-1 was
+    # the last delivered one for OST 0, so alloc[k], alloc[k+1], ... agree
+    for w in range(k + 1, N_WINDOWS):
+        np.testing.assert_array_equal(
+            alloc[w, 0], alloc[k, 0],
+            err_msg=f"alloc moved at window {w} despite lost telemetry")
+    # and the hold is load-bearing: the no-loss twin diverges on OST 0
+    base = np.asarray(simulate_fleet(cfg, nodes, rates, volume, caps,
+                                     backlog).alloc)
+    assert any(not np.array_equal(alloc[w, 0], base[w, 0])
+               for w in range(k + 1, N_WINDOWS))
+
+
+# ------------------------------------------------------- sharded == bitwise
+
+
+@pytest.mark.parametrize("control,telemetry",
+                         [(c, "streaming") for c in list_policies()]
+                         + [("adaptbf", "trajectory")])
+def test_fault_injected_sharded_matches_unsharded(control, telemetry):
+    """Fault rows are row-local state: the sharded engine consumes each
+    OST's fault column on the device that owns the row, adds no mesh
+    crossings, and stays bitwise-equal -- with outages, droop, and loss
+    crossing device boundaries (O=8 splits over any forced 1/2/4/8-device
+    mesh)."""
+    o = 8
+    case = _chaos_case(o, seed=77)
+    nodes, rates, volume, caps, backlog = case
+    plan = faults.random_fault_plan(9, N_WINDOWS, o, mtbf_windows=3.0,
+                                    mttr_windows=2.0, droop_frac=0.7,
+                                    droop_scale=0.3, loss_p=0.25)
+    cfg = FleetConfig(control=control, window_ticks=WINDOW_TICKS,
+                      telemetry=telemetry)
+    ref = simulate_fleet(cfg, nodes, rates, volume, caps, backlog,
+                         fault_plan=plan)
+    sh = simulate_fleet(cfg._replace(partition="ost_shard"), nodes, rates,
+                        volume, caps, backlog, fault_plan=plan)
+    for (p, a), b in zip(jax.tree_util.tree_flatten_with_path(ref)[0],
+                         jax.tree.leaves(sh)):
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b),
+            err_msg=f"{control}/{telemetry}{jax.tree_util.keystr(p)}")
+
+
+# --------------------------------------- online == offline, crash in outage
+
+
+OUTAGE = (3, 6)          # windows [3, 6): OSTs 0 and 1 down
+CRASH_AT = 4             # save -> kill -> restore INSIDE the outage
+
+
+def _crash_plan(o):
+    plan = faults.compose(
+        faults.outage(N_WINDOWS, o, *OUTAGE, osts=[0, 1]),
+        faults.droop(N_WINDOWS, o, start=1, end=N_WINDOWS, scale=0.5,
+                     osts=[o - 1]))
+    plan.telem_ok[2::3, 0] = 0.0          # periodic loss on OST 0
+    return plan
+
+
+@pytest.mark.parametrize("control,telemetry",
+                         [(c, "streaming") for c in list_policies()]
+                         + [("adaptbf", "trajectory")])
+def test_online_crash_restore_inside_outage_is_bitwise(
+        control, telemetry, tmp_path):
+    """The full robustness story in one oracle: the online service under
+    an outage + droop + telemetry-loss plan, killed and restored at a
+    window where two OSTs are DOWN, must replay bitwise what the offline
+    scan computes for the uninterrupted faulted horizon."""
+    o = 3
+    case = _chaos_case(o, seed=55)
+    nodes, rates, volume, caps, backlog = case
+    plan = _crash_plan(o)
+    cfg = FleetConfig(control=control, window_ticks=WINDOW_TICKS,
+                      telemetry=telemetry)
+    offline = simulate_fleet(cfg, nodes, rates, volume, caps, backlog,
+                             fault_plan=plan)
+
+    svc = FleetService(cfg, nodes, volume, caps, backlog,
+                       checkpoint_dir=str(tmp_path / "ckpt"),
+                       fault_plan=plan, checkpoint_on_fault=False)
+    outs = [svc.step(rates[w * WINDOW_TICKS:(w + 1) * WINDOW_TICKS])
+            for w in range(CRASH_AT)]
+    svc.save()
+    del svc                                           # crash mid-outage
+
+    svc2 = FleetService(cfg, nodes, volume, caps, backlog,
+                        checkpoint_dir=str(tmp_path / "ckpt"),
+                        fault_plan=plan, checkpoint_on_fault=False)
+    assert svc2.restore() == CRASH_AT
+    outs += [svc2.step(rates[w * WINDOW_TICKS:(w + 1) * WINDOW_TICKS])
+             for w in range(CRASH_AT, N_WINDOWS)]
+
+    if telemetry == "trajectory":
+        for i, field in enumerate(("served", "demand", "alloc", "record")):
+            got = np.stack([np.asarray(out[i]) for out in outs])
+            np.testing.assert_array_equal(
+                got, np.asarray(getattr(offline, field)), err_msg=field)
+    else:
+        for (p, a), b in zip(
+                jax.tree_util.tree_flatten_with_path(offline.stats)[0],
+                jax.tree.leaves(svc2.stats)):
+            np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(b),
+                err_msg=jax.tree_util.keystr(p))
+    np.testing.assert_array_equal(np.asarray(svc2.queue),
+                                  np.asarray(offline.queue_final))
+
+
+def test_fault_transition_triggers_checkpoint(tmp_path):
+    """checkpoint_on_fault: stepping into the window where an OST goes
+    down saves the carry FIRST, so restore replays the disturbance."""
+    from repro import checkpoint
+
+    o = 3
+    case = _chaos_case(o, seed=55)
+    nodes, rates, volume, caps, backlog = case
+    plan = faults.outage(N_WINDOWS, o, *OUTAGE, osts=[1])
+    cfg = FleetConfig(control="adaptbf", window_ticks=WINDOW_TICKS,
+                      telemetry="streaming")
+    svc = FleetService(cfg, nodes, volume, caps, backlog,
+                       checkpoint_dir=str(tmp_path), fault_plan=plan)
+    for w in range(N_WINDOWS):
+        svc.step(rates[w * WINDOW_TICKS:(w + 1) * WINDOW_TICKS])
+    # exactly one down-transition (window OUTAGE[0]), checkpointed before
+    # the step consumed it
+    assert checkpoint.latest_step(str(tmp_path)) == OUTAGE[0]
+    meta = checkpoint.checkpoint_meta(str(tmp_path))
+    assert meta["step"] == OUTAGE[0]

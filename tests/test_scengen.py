@@ -339,3 +339,26 @@ def test_generated_scenarios_registered_and_parameterizable():
         scn = get_scenario(name, seed=2, n_ost=4, n_jobs=5, duration_s=1.0)
         assert isinstance(scn, FleetScenario)
         assert scn.issue_rate.shape == (100, 4, 5)
+
+
+def test_saturation_profile_pinned():
+    """The saturation profile's "half the OSTs degraded" hand-rolling was
+    rebuilt on ``faults.degraded_capacity``; this pin (captured from the
+    pre-refactor profile) proves the refactor is bitwise-invisible to
+    every existing seed grid."""
+    golden = np.load(pathlib.Path(__file__).parent
+                     / "data" / "golden_saturation.npz")
+    for seed in (0, 7, 1234):
+        for o, j in ((8, 6), (4, 12)):
+            scn = random_fleet(seed, n_ost=o, n_jobs=j,
+                               profile="saturation", duration_s=4.0)
+            key = f"s{seed}_o{o}_j{j}"
+            for field in ("issue_rate", "capacity", "nodes",
+                          "volume", "backlog"):
+                attr = {"issue_rate": scn.issue_rate,
+                        "capacity": scn.capacity_per_tick,
+                        "nodes": scn.nodes, "volume": scn.volume,
+                        "backlog": scn.max_backlog}[field]
+                np.testing.assert_array_equal(
+                    np.asarray(attr), golden[f"{key}_{field}"],
+                    err_msg=f"{key}_{field}")

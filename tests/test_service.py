@@ -154,6 +154,117 @@ def test_budget_and_alloc_views():
     assert (np.asarray(svc.queue) >= 0).all()
 
 
+# ---------------------------------------------------- production ingest
+
+
+def test_ingest_retries_with_backoff_then_delivers():
+    nodes, rates, volume, cap, backlog = small_fleet()
+    cfg = FleetConfig(control="adaptbf")
+    svc = FleetService(cfg, nodes, volume, cap, backlog)
+    twin = FleetService(cfg, nodes, volume, cap, backlog)
+
+    calls, delays = [], []
+    def fetch():
+        calls.append(1)
+        if len(calls) < 3:
+            raise TimeoutError("stats RPC dropped")
+        return rates[:WT]
+
+    res = svc.ingest(fetch, backoff_s=0.05, sleep=delays.append)
+    assert res.delivered and res.attempts == 3
+    assert delays == [0.05, 0.1]                       # exponential backoff
+    assert svc.retry_count == 2 and svc.lost_windows == 0
+    ref = twin.step(rates[:WT])
+    for a, b in zip(jax.tree.leaves(res.out), jax.tree.leaves(ref)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_ingest_failure_degrades_through_loss_mask():
+    """A window whose observation never arrives still advances the
+    engine: zero observed arrivals, telem_ok forced to zero -- bitwise
+    the explicit lost-telemetry step, not a stalled loop."""
+    from repro.storage.faults import lost_telemetry_row
+
+    nodes, rates, volume, cap, backlog = small_fleet()
+    cfg = FleetConfig(control="adaptbf", telemetry="streaming")
+    svc = FleetService(cfg, nodes, volume, cap, backlog)
+    twin = FleetService(cfg, nodes, volume, cap, backlog)
+    svc.step(rates[:WT])                               # build a standing queue
+    twin.step(rates[:WT])
+
+    def fetch():
+        return None                                    # collector timed out
+
+    res = svc.ingest(fetch, retries=2, sleep=lambda _: None)
+    assert not res.delivered and res.attempts == 3
+    assert svc.lost_windows == 1 and svc.window == 2
+    zeros = np.zeros((WT, O, J), np.float32)
+    twin.step(zeros, faults_w=lost_telemetry_row(O))
+    for a, b in zip(jax.tree.leaves(svc.carry), jax.tree.leaves(twin.carry)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert int(np.asarray(svc.stats.obs_lost).sum()) == O  # counted
+
+
+def test_ingest_watchdog_cuts_retries_at_deadline():
+    nodes, rates, volume, cap, backlog = small_fleet()
+    svc = FleetService(FleetConfig(), nodes, volume, cap, backlog)
+    t = iter(np.arange(0.0, 100.0, 1.0))
+
+    res = svc.ingest(lambda: None, retries=50, deadline_s=0.5,
+                     sleep=lambda _: None, clock=lambda: next(t))
+    assert not res.delivered
+    assert res.attempts == 1                 # deadline < first backoff: stop
+    assert svc.lost_windows == 1
+
+
+# ------------------------------------------- restore compatibility checks
+
+
+def _saved_service(tmp_path, cfg, fleet):
+    nodes, rates, volume, cap, backlog = fleet
+    svc = FleetService(cfg, nodes, volume, cap, backlog,
+                       checkpoint_dir=str(tmp_path))
+    svc.step(rates[:WT])
+    svc.save()
+    return svc
+
+
+def test_restore_rejects_wrong_fleet_shape(tmp_path):
+    """Regression: restoring a carry saved for a different (n_ost,
+    n_jobs) used to fail deep inside the leaf loader with a bare numpy
+    broadcast error; it must fail fast, naming both shapes."""
+    fleet = small_fleet()
+    cfg = FleetConfig(control="adaptbf")
+    _saved_service(tmp_path, cfg, fleet)
+    nodes, rates, volume, cap, backlog = fleet
+    other = FleetService(cfg, nodes, volume[: O - 1], cap[: O - 1],
+                         backlog[: O - 1], checkpoint_dir=str(tmp_path))
+    with pytest.raises(ValueError, match=rf"\({O}, {J}\).*\({O - 1}, {J}\)"):
+        other.restore()
+
+
+def test_restore_rejects_wrong_telemetry_mode(tmp_path):
+    fleet = small_fleet()
+    _saved_service(tmp_path, FleetConfig(control="adaptbf",
+                                         telemetry="streaming"), fleet)
+    nodes, rates, volume, cap, backlog = fleet
+    other = FleetService(FleetConfig(control="adaptbf"), nodes, volume,
+                         cap, backlog, checkpoint_dir=str(tmp_path))
+    with pytest.raises(ValueError, match="telemetry='streaming'.*"
+                                         "telemetry='trajectory'"):
+        other.restore()
+
+
+def test_restore_rejects_wrong_policy(tmp_path):
+    fleet = small_fleet()
+    _saved_service(tmp_path, FleetConfig(control="adaptbf"), fleet)
+    nodes, rates, volume, cap, backlog = fleet
+    other = FleetService(FleetConfig(control="aimd"), nodes, volume,
+                         cap, backlog, checkpoint_dir=str(tmp_path))
+    with pytest.raises(ValueError, match="different control policy"):
+        other.restore()
+
+
 # ------------------------------------------------- checkpoint path contract
 
 
@@ -175,6 +286,8 @@ EXPECTED_STATS_PATHS = (
     ".comp.demand_sum", ".comp.demand_sumsq",
     ".comp.alloc_sum", ".comp.alloc_sumsq",
     ".comp.util_sum", ".comp.lag_sum", ".comp.lag_sumsq", ".comp.lag_hist",
+    # fault counters (PR 7) -- appended, per the naming contract
+    ".down_windows", ".droop_windows", ".obs_lost",
 )
 
 
@@ -191,9 +304,12 @@ def test_carry_checkpoint_paths_are_stable():
     prefix = (".window", ".queue", ".vol_left",
               ".policy_state.record", ".policy_state.remainder",
               ".policy_state.alloc_prev", ".alloc")
+    # the last-observation-hold state (PR 7) -- appended after .stats,
+    # per the extend-by-appending contract
+    suffix = (".held.served", ".held.demand", ".held.alloc")
     assert paths[:len(prefix)] == prefix
     assert paths[len(prefix):] == tuple(
-        ".stats" + p for p in EXPECTED_STATS_PATHS)
+        ".stats" + p for p in EXPECTED_STATS_PATHS) + suffix
     assert len(set(paths)) == len(paths)               # paths are unique
 
 
