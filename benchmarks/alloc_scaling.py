@@ -27,13 +27,15 @@ Backend provenance off-TPU: ``alloc_backend="pallas"`` cells time the
 Pallas *interpret* trace (the blocked kernel math lowered through XLA --
 a real, often faster formulation on CPU, but not the Mosaic artifact),
 while ``serve_backend="fused"`` cells time the fused XLA fallback the
-simulator actually dispatches to off-TPU.
+simulator actually dispatches to off-TPU.  The ``serve_backend="mega"``
+cells time the whole-round megakernel's blocked XLA fallback
+(``kernels/window_mega``): gate + ticks + observation + allocation in one
+invocation per window, runtime-specialized serve/alloc branches included.
 """
 from __future__ import annotations
 
 import argparse
 import json
-import time
 
 import jax
 import jax.numpy as jnp
@@ -41,7 +43,10 @@ import numpy as np
 
 from repro.kernels import dispatch
 from repro.kernels.adaptbf_alloc import ops as alloc_ops
+from repro.kernels.window_mega import ops as mega_ops
 from repro.storage import FleetConfig, simulate_fleet
+
+from _harness import blocking, provenance, timeit_steady
 
 GRID_O = (16, 64, 256)
 GRID_J = (128, 1024, 4096)
@@ -50,6 +55,8 @@ BACKENDS = (  # (alloc_backend, serve_backend)
     ("core", "fused"),
     ("pallas", "scan"),
     ("pallas", "fused"),
+    ("core", "mega"),    # fused control round (alloc_backend is ignored:
+                         #   the allocator runs inside the megakernel)
 )
 REFERENCE_SHAPE = (64, 1024)  # the acceptance cell for speedup reporting
 
@@ -66,40 +73,37 @@ def _case(o: int, j: int, n_windows: int, window_ticks: int, seed: int = 0):
 
 
 def run_cell(o: int, j: int, alloc_backend: str, serve_backend: str,
-             n_windows: int, window_ticks: int = 10, reps: int = 2):
+             n_windows: int, window_ticks: int = 10, reps: int = 3):
     cfg = FleetConfig(control="adaptbf", window_ticks=window_ticks,
                       alloc_backend=alloc_backend,
                       serve_backend=serve_backend)
     nodes, rates, volume = _case(o, j, n_windows, window_ticks)
-    run = lambda: jax.block_until_ready(
-        simulate_fleet(cfg, nodes, rates, volume))
-
-    t0 = time.perf_counter()
-    run()  # compile + first run
-    compile_s = time.perf_counter() - t0
-    wall = min(_timed(run) for _ in range(reps))
+    t = timeit_steady(blocking(simulate_fleet, cfg, nodes, rates, volume),
+                      reps=reps)
 
     jp = dispatch.pad_lanes(j)
     sim_seconds = n_windows * window_ticks * cfg.tick_seconds
+    if serve_backend == "mega":
+        # the megakernel blocks the whole round at once: one row-block
+        # policy for serve AND alloc (3 policy-state leaves for adaptbf)
+        serve_block = dispatch.block_rows(
+            o, jp, mega_ops._live_rows(3, window_ticks))
+        alloc_block = serve_block
+    else:
+        alloc_block = dispatch.block_rows(o, jp, alloc_ops._LIVE_ROWS)
+        serve_block = dispatch.block_rows(o, jp, window_ticks + 10)
     return {
         "o": o,
         "j": j,
         "alloc_backend": alloc_backend,
         "serve_backend": serve_backend,
         "n_windows": n_windows,
-        "wall_s": wall,
-        "windows_per_s": n_windows / wall,
-        "wall_per_sim_s": wall / sim_seconds,
-        "compile_s": compile_s,
-        "alloc_block_o": dispatch.block_rows(o, jp, alloc_ops._LIVE_ROWS),
-        "serve_block_o": dispatch.block_rows(o, jp, window_ticks + 10),
+        "windows_per_s": n_windows / t["wall_s"],
+        "wall_per_sim_s": t["wall_s"] / sim_seconds,
+        "alloc_block_o": alloc_block,
+        "serve_block_o": serve_block,
+        **t,
     }
-
-
-def _timed(run):
-    t0 = time.perf_counter()
-    run()
-    return time.perf_counter() - t0
 
 
 def sweep(grid_o=GRID_O, grid_j=GRID_J, backends=BACKENDS,
@@ -132,9 +136,8 @@ def sweep(grid_o=GRID_O, grid_j=GRID_J, backends=BACKENDS,
             "grid_j": list(grid_j),
             "backends": [list(b) for b in backends],
             "window_ticks": window_ticks,
-            "jax_version": jax.__version__,
-            "jax_backend": jax.default_backend(),
         },
+        "provenance": provenance(),
         "cells": cells,
         "peak_shape": peak,
     }

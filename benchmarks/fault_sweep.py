@@ -47,7 +47,7 @@ from repro.storage import (
     random_fleet,
     simulate_fleet,
 )
-from fleet_sweep import provenance
+from _harness import provenance
 
 #: The severity ladder: MTBF/MTTR in windows, droop hit-rate and floor,
 #: telemetry loss probability.  "calm" is the faultless control row --

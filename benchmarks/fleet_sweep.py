@@ -33,8 +33,6 @@ from __future__ import annotations
 import argparse
 import functools
 import json
-import subprocess
-import sys
 import time
 
 import jax
@@ -52,26 +50,9 @@ from repro.storage import (
 )
 from repro.storage import metrics
 
+from _harness import provenance
+
 BASELINE_TRIO = ("adaptbf", "static", "nobw")
-
-
-def git_sha() -> str:
-    try:
-        return subprocess.run(
-            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
-            timeout=10, check=True).stdout.strip()
-    except Exception:
-        return "unknown"
-
-
-def provenance(cfg: FleetConfig) -> dict:
-    return {
-        "jax_version": jax.__version__,
-        "jax_backend": jax.default_backend(),
-        "git_sha": git_sha(),
-        "argv": sys.argv,
-        "fleet_config": cfg._asdict(),
-    }
 
 
 def _pad_axis(x: np.ndarray, size: int, axis: int, value=0.0) -> np.ndarray:

@@ -1,12 +1,19 @@
-"""Benchmark harness: one entry per paper table/figure plus the roofline
-report derived from the multi-pod dry-run.  Prints ``name,us_per_call,derived``
-CSV rows followed by the detailed JSON per benchmark."""
+"""Benchmark harness: one entry per paper table/figure plus the
+window-engine roofline (scan vs fused vs mega).  Prints
+``name,us_per_call,derived`` CSV rows followed by the detailed JSON per
+benchmark."""
 from __future__ import annotations
 
 import json
+import os
+import sys
 import time
 
-from benchmarks import fleet_sweep, paper_figures, roofline_report
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+import fleet_sweep
+import paper_figures
+import roofline_report
 
 
 def main() -> None:
@@ -34,14 +41,10 @@ def main() -> None:
     print("=== details ===")
     print(json.dumps(details, indent=2, default=float))
     print()
-    cells = roofline_report.load()
-    print(roofline_report.summary(cells))
-    print()
-    print("## single-pod (16x16) roofline (from dry-run artifacts)")
-    print(roofline_report.table(cells, "pod16x16"))
-    print()
-    print("## multi-pod (2x16x16)")
-    print(roofline_report.table(cells, "pod2x16x16"))
+    print("## window-engine roofline (small cell; full grid: "
+          "benchmarks/roofline_report.py --out BENCH_roofline.json)")
+    roof = roofline_report.sweep(shapes=((8, 128),), n_windows=2)
+    print(json.dumps(roof["cells"], indent=2, default=float))
 
 
 if __name__ == "__main__":

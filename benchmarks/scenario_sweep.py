@@ -46,7 +46,7 @@ from repro.storage import (
     scengen,
     simulate_fleet,
 )
-from fleet_sweep import provenance
+from _harness import provenance
 
 
 @functools.lru_cache(maxsize=None)

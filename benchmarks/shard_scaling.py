@@ -25,7 +25,6 @@ import json
 import os
 import subprocess
 import sys
-import time
 
 
 def worker(ost: int, jobs: int, windows: int, trace_windows: int,
@@ -38,6 +37,7 @@ def worker(ost: int, jobs: int, windows: int, trace_windows: int,
     from repro.storage import FleetConfig, simulate_fleet
 
     sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    from _harness import blocking, timeit_steady
     from long_horizon import build_case
 
     if jax.device_count() != devices:
@@ -48,17 +48,14 @@ def worker(ost: int, jobs: int, windows: int, trace_windows: int,
     nodes, rates, volume = build_case(ost, jobs, trace_windows, window_ticks)
 
     def timed(cfg):
-        go = lambda: jax.block_until_ready(simulate_fleet(
+        go = blocking(simulate_fleet, cfg, nodes, rates, volume,
+                      n_windows=windows)
+        t = timeit_steady(go)
+        res = jax.block_until_ready(simulate_fleet(
             cfg, nodes, rates, volume, n_windows=windows))
-        t0 = time.perf_counter()
-        go()
-        compile_s = time.perf_counter() - t0
-        t0 = time.perf_counter()
-        res = go()
-        wall = time.perf_counter() - t0
         total = float(np.asarray(res.stats.served_sum, np.float64).sum())
-        return {"wall_s": wall, "windows_per_s": windows / wall,
-                "compile_s": compile_s, "served_total": total}
+        return {"windows_per_s": windows / t["wall_s"],
+                "served_total": total, **t}
 
     base = FleetConfig(control=policy, telemetry="streaming",
                        window_ticks=window_ticks)
@@ -70,7 +67,7 @@ def worker(ost: int, jobs: int, windows: int, trace_windows: int,
 
 
 def sweep(args) -> dict:
-    import jax
+    from _harness import provenance
 
     cells = []
     for n in args.devices:
@@ -111,11 +108,7 @@ def sweep(args) -> dict:
                   "trace_windows": args.trace_windows,
                   "policy": args.policy, "telemetry": "streaming"},
         "cells": cells,
-        "provenance": {
-            "jax_version": jax.__version__,
-            "backend": "cpu-forced-host-devices",
-            "argv": sys.argv,
-        },
+        "provenance": provenance(backend_note="cpu-forced-host-devices"),
     }
 
 

@@ -79,7 +79,10 @@ class PolicyContext(NamedTuple):
     cap_w:          [O] window token budget per storage target.
     u_max:          utilization-score cap (adaptbf, DESIGN.md deviation 1).
     integer_tokens: integerize allocations with remainder fairness.
-    alloc_backend:  "core" (vmap) | "pallas" (kernel) for adaptbf rounds.
+    alloc_backend:  "core" (vmap) | "pallas" (kernel) for adaptbf rounds;
+                    "block" / "block_cond" are the window megakernel's
+                    in-block dispatch (``kernels/window_mega``), never set
+                    by user configuration.
     control_code:   traced int32 scalar selecting the member of a
                     ``CodedPolicy``; None under direct dispatch.
     """
@@ -233,6 +236,29 @@ class AdapTBFPolicy(ControlPolicy):
             alloc, rec, rem = ops.fleet_alloc(
                 obs.demand, ctx.nodes, state.record, state.remainder,
                 state.alloc_prev, ctx.cap_w, u_max=ctx.u_max)
+            state = AllocatorState(record=rec, remainder=rem,
+                                   alloc_prev=alloc)
+            return self._reclaim(state, obs), alloc
+        if ctx.alloc_backend in ("block", "block_cond"):
+            # the in-block 2-D formulation of the same three-step round,
+            # traced inline by the window megakernel (its Pallas body or
+            # the blocked XLA fallback) so allocator state never leaves
+            # the block.  "block_cond" additionally lets the integerizer
+            # skip its excess bit-descent at runtime (XLA fallback only;
+            # the Mosaic body stays straight-line).
+            import functools
+
+            from repro.core import remainder
+            from repro.kernels.adaptbf_alloc.kernel import _alloc_block
+            dist = (functools.partial(
+                        remainder.integerize,
+                        specialize=ctx.alloc_backend == "block_cond")
+                    if ctx.integer_tokens else remainder.passthrough)
+            alloc, rec, rem = _alloc_block(
+                obs.demand, ctx.nodes, state.record, state.remainder,
+                state.alloc_prev, ctx.cap_w[:, None], ctx.u_max,
+                dist=dist, integer_tokens=ctx.integer_tokens,
+                specialize=ctx.alloc_backend == "block_cond")
             state = AllocatorState(record=rec, remainder=rem,
                                    alloc_prev=alloc)
             return self._reclaim(state, obs), alloc

@@ -30,8 +30,28 @@ _EPS = 1e-12
 
 
 def _alloc_block(demand, nodes, record, remainder, alloc_prev, capacity,
-                 u_max: float):
-    """The full three-step window allocation on a [O, J] block."""
+                 u_max: float, *, dist=None, integer_tokens: bool = True,
+                 specialize: bool = False):
+    """The full three-step window allocation on a [O, J] block.
+
+    ``dist`` is the distribution primitive (default
+    ``core/remainder.integerize``; the window megakernel's XLA fallback
+    passes the runtime-specialized variant, float-token callers pass
+    ``passthrough``); ``integer_tokens`` controls the reclaim floor,
+    matching ``core/adaptbf.allocate``.
+
+    ``specialize=True`` wraps the surplus-redistribution and
+    re-compensation distribution calls in ``lax.cond`` on their runtime
+    totals.  Distributing a zero total is an exact identity (raw == 0,
+    floor == 0, delta == 0, so applied == 0 and the remainder carry is
+    returned unchanged), so the skip is bitwise-equal to the full trace --
+    it only drops work the numbers prove dead.  Saturated fleets (demand
+    everywhere above allocation, empty borrowing ledger) take both skips
+    every window, paying for one distribution instead of three.  Only
+    valid off-vmap and outside Pallas (``lax.cond`` under vmap degrades
+    to running both branches).
+    """
+    dist = _integerize if dist is None else dist
     active = demand > 0
     any_active = jnp.any(active, axis=-1, keepdims=True)
 
@@ -39,7 +59,7 @@ def _alloc_block(demand, nodes, record, remainder, alloc_prev, capacity,
     n_act = jnp.where(active, nodes, 0.0)
     p = n_act / jnp.maximum(jnp.sum(n_act, axis=-1, keepdims=True), _EPS)
     budget1 = jnp.where(any_active, capacity, 0.0)
-    alpha1, rem = _integerize(budget1 * p, remainder, budget1, active)
+    alpha1, rem = dist(budget1 * p, remainder, budget1, active)
 
     # step 2: surplus redistribution (Eq. 3-8)
     u = jnp.minimum(demand / jnp.maximum(alloc_prev, 1.0), u_max)
@@ -49,7 +69,14 @@ def _alloc_block(demand, nodes, record, remainder, alloc_prev, capacity,
     df = jnp.where(u > 1.0, u + u * p, u * p)
     df = jnp.where(active, df, 0.0)
     share = df / jnp.maximum(jnp.sum(df, axis=-1, keepdims=True), _EPS)
-    add_rd, rem = _integerize(share * t_s, rem, t_s, active)
+    if specialize:
+        add_rd, rem = jax.lax.cond(
+            jnp.any(t_s > 0),
+            lambda _: dist(share * t_s, rem, t_s, active),
+            lambda _: (jnp.zeros_like(share), rem),
+            operand=None)
+    else:
+        add_rd, rem = dist(share * t_s, rem, t_s, active)
     alpha_rd = alpha1 - surplus + add_rd
     r_rd = record + surplus - add_rd
 
@@ -68,7 +95,8 @@ def _alloc_block(demand, nodes, record, remainder, alloc_prev, capacity,
     t_owed = jnp.sum(owed, axis=-1, keepdims=True)
     reclaim = reclaim * jnp.minimum(
         1.0, t_owed / jnp.maximum(jnp.sum(reclaim, axis=-1, keepdims=True), _EPS))
-    reclaim = jnp.floor(reclaim)
+    if integer_tokens:
+        reclaim = jnp.floor(reclaim)
     t_r = jnp.sum(reclaim, axis=-1, keepdims=True)
     df_plus = jnp.where(j_plus, df, 0.0)
     share_p = df_plus / jnp.maximum(jnp.sum(df_plus, axis=-1, keepdims=True), _EPS)
@@ -77,7 +105,14 @@ def _alloc_block(demand, nodes, record, remainder, alloc_prev, capacity,
     leftover = t_r - jnp.sum(add1, axis=-1, keepdims=True)
     add_raw = add1 + leftover * headroom / jnp.maximum(
         jnp.sum(headroom, axis=-1, keepdims=True), _EPS)
-    add_rc, rem = _integerize(add_raw, rem, t_r, j_plus)
+    if specialize:
+        add_rc, rem = jax.lax.cond(
+            jnp.any(t_r > 0),
+            lambda _: dist(add_raw, rem, t_r, j_plus),
+            lambda _: (jnp.zeros_like(add_raw), rem),
+            operand=None)
+    else:
+        add_rc, rem = dist(add_raw, rem, t_r, j_plus)
     alpha_rc = alpha_rd - reclaim + add_rc
     r_rc = r_rd + reclaim - add_rc
 

@@ -1,0 +1,8 @@
+"""Fused window megakernel: one invocation per observation window runs the
+whole control round -- gate, every service tick, observation select, and the
+policy's allocation step -- so allocation state, token budgets, queues, and
+volumes never round-trip through HBM between the allocation and service
+kernels (``FleetConfig(serve_backend="mega")``)."""
+from repro.kernels.window_mega.ops import mega_window_round
+
+__all__ = ["mega_window_round"]

@@ -2,8 +2,7 @@
 AdapTBF-paced I/O exactly as the dry-run lowers them, then runs real steps.
 
 On a TPU slice this is the deployable entry point; on CPU it runs the same
-code on a (1,1) mesh (used by the e2e test below).  ``--dry-run`` delegates
-to launch.dryrun for AOT compile + roofline extraction only.
+code on a (1,1) mesh (used by the e2e test below).
 
   python -m repro.launch.train --arch phi3-mini-3.8b --steps 100 \
       --mesh 1x1 --global-batch 8 --seq 128 --smoke

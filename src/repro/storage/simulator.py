@@ -123,8 +123,13 @@ class FleetConfig(NamedTuple):
     max_backlog: float = 256.0
     alloc_backend: str = "core"        # core (vmap) | pallas (kernel)
     serve_backend: str = "scan"        # scan (per-tick lax.scan) | fused
-                                       #   (whole-window kernel, one
-                                       #   invocation per window)
+                                       #   (whole-window serve kernel, one
+                                       #   invocation per window) | mega
+                                       #   (whole CONTROL ROUND fused:
+                                       #   gate + ticks + observe + policy
+                                       #   step, kernels/window_mega;
+                                       #   alloc_backend is ignored -- the
+                                       #   allocator runs in-block)
     telemetry: str = "trajectory"      # trajectory | streaming
     coded_policies: tuple = DEFAULT_CODED_POLICIES
                                        # member subset for control="coded"
@@ -374,22 +379,36 @@ def window_step(cfg: FleetConfig, policy: ControlPolicy, ctx: PolicyContext,
         rates_w = rates_w * faults_w.up[None, :, None]
         ctx_w = ctx._replace(cap_w=cap_tick_w * cfg.window_ticks)
         up_col = faults_w.up[:, None]
-    budget0 = policy.gate(carry.alloc, ctx_w)
-    queue, vol_left, served_w = _serve_window(
-        cfg, carry.queue, carry.vol_left, budget0, rates_w, backlog_cap,
-        cap_tick_w)
-    demand = served_w + queue
-    if faults_w is None:
-        obs_served, obs_demand, obs_alloc = served_w, demand, carry.alloc
+    if cfg.serve_backend == "mega":
+        # the whole control round -- gate, every tick, observation select,
+        # policy step -- in ONE fused invocation per window, so engine and
+        # allocator state stay block-resident across the phase boundary
+        # (imported lazily like the other kernel backends)
+        from repro.kernels.window_mega import ops as mega_ops
+        (queue, vol_left, served_w, demand, obs_served, obs_demand,
+         obs_alloc, pstate, alloc_next) = mega_ops.mega_window_round(
+            policy, ctx_w, cap_tick_w, backlog_cap, carry.queue,
+            carry.vol_left, carry.alloc, carry.held, carry.policy_state,
+            rates_w,
+            telem_ok=None if faults_w is None else faults_w.telem_ok,
+            up=None if faults_w is None else faults_w.up)
     else:
-        delivered = faults_w.telem_ok[:, None] > 0
-        obs_served = jnp.where(delivered, served_w, carry.held.served)
-        obs_demand = jnp.where(delivered, demand, carry.held.demand)
-        obs_alloc = jnp.where(delivered, carry.alloc, carry.held.alloc)
-    pstate, alloc_next = policy.step(
-        carry.policy_state,
-        WindowObs(served=obs_served, demand=obs_demand, alloc=obs_alloc,
-                  up=up_col), ctx_w)
+        budget0 = policy.gate(carry.alloc, ctx_w)
+        queue, vol_left, served_w = _serve_window(
+            cfg, carry.queue, carry.vol_left, budget0, rates_w, backlog_cap,
+            cap_tick_w)
+        demand = served_w + queue
+        if faults_w is None:
+            obs_served, obs_demand, obs_alloc = served_w, demand, carry.alloc
+        else:
+            delivered = faults_w.telem_ok[:, None] > 0
+            obs_served = jnp.where(delivered, served_w, carry.held.served)
+            obs_demand = jnp.where(delivered, demand, carry.held.demand)
+            obs_alloc = jnp.where(delivered, carry.alloc, carry.held.alloc)
+        pstate, alloc_next = policy.step(
+            carry.policy_state,
+            WindowObs(served=obs_served, demand=obs_demand, alloc=obs_alloc,
+                      up=up_col), ctx_w)
     if cfg.telemetry == "streaming":
         stats = telemetry.update_stats(carry.stats, served_w, demand,
                                        carry.alloc, ctx_w.cap_w,

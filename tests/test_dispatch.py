@@ -1,0 +1,78 @@
+"""Unit pins for ``kernels/dispatch`` -- the single VMEM sizing authority
+every kernel package (adaptbf_alloc, fleet_window, window_mega) defers to.
+A silent change here re-blocks every kernel at once, so the picked sizes
+are pinned explicitly: sharded-local row counts, the J=16384 upper end,
+and the cap-at-row-count edge that keeps 1-row shards from padding out to
+8-row blocks."""
+import numpy as np
+
+from repro.kernels import dispatch
+from repro.kernels.adaptbf_alloc import ops as alloc_ops
+from repro.kernels.window_mega import ops as mega_ops
+
+
+def test_pad_lanes_multiples():
+    assert dispatch.pad_lanes(1) == 128
+    assert dispatch.pad_lanes(128) == 128
+    assert dispatch.pad_lanes(129) == 256
+    assert dispatch.pad_lanes(4096) == 4096
+    assert dispatch.pad_lanes(16384) == 16384
+
+
+def test_block_rows_caps_at_local_row_count():
+    """partition="ost_shard" hands each device O/n_devices rows; the block
+    must shrink to the local slice, never pad a small shard to 8 rows."""
+    j = dispatch.pad_lanes(1024)
+    # O=8 fleet on a 2-way mesh: 4 local rows -> block 4
+    assert dispatch.block_rows(4, j, alloc_ops._LIVE_ROWS) == 4
+    # O=8 fleet on a 4-way mesh: 2 local rows -> block 2
+    assert dispatch.block_rows(2, j, alloc_ops._LIVE_ROWS) == 2
+    # degenerate 1-row shard (8-way mesh on O=8)
+    assert dispatch.block_rows(1, j, alloc_ops._LIVE_ROWS) == 1
+    # n_rows=0 is clamped, not a crash
+    assert dispatch.block_rows(0, j, alloc_ops._LIVE_ROWS) == 1
+
+
+def test_block_rows_upper_end_j16384():
+    """At the J=16384 upper end the working set per row is 64 KiB x
+    live_rows; the picker must step the block down instead of busting the
+    8 MiB budget."""
+    j = dispatch.pad_lanes(16384)
+    assert j == 16384
+    row_bytes = j * 4
+    for live in (alloc_ops._LIVE_ROWS, 10 + 10,
+                 mega_ops._live_rows(3, 10)):
+        b = dispatch.block_rows(256, j, live)
+        assert live * b * row_bytes <= 8 * 2**20, (live, b)
+        if b < 8:  # maximality: the next size up would not have fit
+            assert live * (b * 2) * row_bytes > 8 * 2**20, (live, b)
+
+
+def test_block_rows_mega_live_rows_monotone():
+    """The megakernel keeps the whole round resident: its live-row count
+    grows with window length and policy-state size, and block_rows must
+    respond by shrinking the block -- this is the VMEM budget table in
+    DESIGN.md section 12."""
+    j = dispatch.pad_lanes(4096)
+    lives = [mega_ops._live_rows(3, w) for w in (10, 40, 160)]
+    assert lives == sorted(lives)
+    blocks = [dispatch.block_rows(256, j, lv) for lv in lives]
+    assert blocks == sorted(blocks, reverse=True)
+    for lv, b in zip(lives, blocks):
+        assert lv * b * j * 4 <= 8 * 2**20
+
+
+def test_block_rows_budget_boundary_exact():
+    """Fitting is <= budget, not <."""
+    j = 128
+    live = 16
+    # pick a budget that exactly fits b=8
+    budget = live * 8 * j * 4
+    assert dispatch.block_rows(64, j, live, budget_bytes=budget) == 8
+    assert dispatch.block_rows(64, j, live, budget_bytes=budget - 1) == 4
+
+
+def test_block_rows_floor_is_one():
+    """Even when a single row busts the budget the picker returns 1 (the
+    kernel then simply runs at the smallest grid, it never returns 0)."""
+    assert dispatch.block_rows(256, 16384, 10_000) == 1

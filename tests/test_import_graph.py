@@ -1,0 +1,56 @@
+"""Quarantine the dormant seed surface: the fleet engine's tier-1 import
+graph (``repro.storage``, ``repro.core``, the live kernel packages) must
+not pull in the model-stack modules (``kernels.attention``, ``kernels.ssd``
+and the ``models``/``serving``/``training`` layers that hold them
+load-bearing).  The deleted ``launch.dryrun`` must stay deleted.
+
+Runs in a subprocess so the check sees a clean ``sys.modules`` rather
+than whatever the rest of the pytest session already imported.
+"""
+import os
+import subprocess
+import sys
+
+QUARANTINED = (
+    "repro.kernels.attention",
+    "repro.kernels.ssd",
+    "repro.models",
+    "repro.serving",
+    "repro.training",
+    "repro.launch.dryrun",
+)
+
+_PROBE = """
+import sys
+import repro.storage
+import repro.core
+import repro.core.policies
+import repro.kernels.dispatch
+import repro.kernels.adaptbf_alloc
+import repro.kernels.fleet_window
+import repro.kernels.window_mega
+bad = [m for m in sys.modules if any(
+    m == q or m.startswith(q + ".") for q in {quarantined!r})]
+if bad:
+    raise SystemExit("tier-1 import graph pulled in quarantined modules: "
+                     + ", ".join(sorted(bad)))
+print("clean")
+"""
+
+
+def test_tier1_import_graph_excludes_quarantined_modules():
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    env = dict(os.environ, PYTHONPATH=src)
+    proc = subprocess.run(
+        [sys.executable, "-c", _PROBE.format(quarantined=QUARANTINED)],
+        capture_output=True, text=True, env=env, timeout=300)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "clean" in proc.stdout
+
+
+def test_launch_dryrun_is_deleted():
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    assert not os.path.exists(
+        os.path.join(src, "repro", "launch", "dryrun.py"))
