@@ -12,9 +12,10 @@ Two measurements per (severity, policy):
   on generated demand, the min/mean/max of utilization (of *surviving*
   capacity -- the engine scores service against the fault-adjusted
   budget), fairness, and delivered volume.  All policies run as ONE
-  coded/vmapped streaming invocation per seed, the fault plan riding
-  along as a traced argument, so the whole grid reuses one compiled
-  program.
+  coded streaming invocation per seed through the tenant axis
+  (``storage.simulate_tenants``, scenario + plan shared, codes batched),
+  the fault plan riding along as a traced argument, so the whole grid
+  reuses one compiled program.
 * **recovery time** -- a deterministic single-outage trajectory (25% of
   OSTs down for a fixed stretch): how many windows after the outage
   lifts until per-window utilization is back to >= 90% of its pre-outage
@@ -31,7 +32,6 @@ bench-smoke job.
 from __future__ import annotations
 
 import argparse
-import functools
 import json
 import time
 
@@ -45,7 +45,7 @@ from repro.storage import (
     list_policies,
     metrics,
     random_fleet,
-    simulate_fleet,
+    simulate_tenants,
 )
 from _harness import provenance
 
@@ -66,27 +66,25 @@ SEVERITIES = {
 }
 
 
-@functools.lru_cache(maxsize=None)
-def build_runner(cfg: FleetConfig):
-    """One compiled streaming program over the policy-code axis; the
-    fault plan is a traced argument (in_axes=None), so every severity and
-    seed reuses this single compilation."""
-    def run_one(nodes, rates, vol, caps, backlog, plan, code):
-        res = simulate_fleet(cfg, nodes, rates, vol, caps, backlog,
-                             control_code=code, fault_plan=plan)
-        return res.stats, res.queue_final
-    return jax.jit(jax.vmap(
-        run_one, in_axes=(None, None, None, None, None, None, 0)))
+def run_chaos_batch(cfg: FleetConfig, args, plan, codes):
+    """One compiled streaming program over the policy-code axis via the
+    tenant entry point: scenario arrays and the fault plan shared, codes
+    batched.  The plan is a traced argument, so every severity and seed
+    reuses one compilation (``simulate_tenants`` is jitted on
+    (cfg, n_fleets))."""
+    nodes, rates, vol, caps, backlog = args
+    res = simulate_tenants(cfg, nodes, rates, vol, capacity_per_tick=caps,
+                           max_backlog=backlog, control_code=codes,
+                           fault_plan=plan)
+    return res.stats, res.queue_final
 
 
-@functools.lru_cache(maxsize=None)
-def build_trajectory_runner(cfg: FleetConfig):
-    def run_one(nodes, rates, vol, caps, backlog, plan, code):
-        res = simulate_fleet(cfg, nodes, rates, vol, caps, backlog,
-                             control_code=code, fault_plan=plan)
-        return res.served
-    return jax.jit(jax.vmap(
-        run_one, in_axes=(None, None, None, None, None, None, 0)))
+def run_trajectory_batch(cfg: FleetConfig, args, plan, codes):
+    nodes, rates, vol, caps, backlog = args
+    res = simulate_tenants(cfg, nodes, rates, vol, capacity_per_tick=caps,
+                           max_backlog=backlog, control_code=codes,
+                           fault_plan=plan)
+    return res.served
 
 
 def _scenario_args(scn):
@@ -112,7 +110,6 @@ def chaos_grid(policies, seeds, seed0, n_ost, n_jobs, duration_s,
     """Random fault plans x generated demand, all policies per dispatch."""
     cfg = FleetConfig(control="coded", window_ticks=window_ticks,
                       telemetry="streaming", coded_policies=policies)
-    run = build_runner(cfg)
     codes = jnp.arange(len(policies), dtype=jnp.int32)
     out = {}
     for severity, knobs in SEVERITIES.items():
@@ -123,8 +120,8 @@ def chaos_grid(policies, seeds, seed0, n_ost, n_jobs, duration_s,
             n_windows = scn.issue_rate.shape[0] // window_ticks
             plan = faults.random_fault_plan(seed, n_windows, n_ost, **knobs)
             t0 = time.perf_counter()
-            stats_c, _ = jax.block_until_ready(
-                run(*_scenario_args(scn), _jplan(plan), codes))
+            stats_c, _ = jax.block_until_ready(run_chaos_batch(
+                cfg, _scenario_args(scn), _jplan(plan), codes))
             wall = time.perf_counter() - t0
             row = {"seed": seed, "wall_s": wall,
                    "down_window_frac":
@@ -162,7 +159,6 @@ def recovery_times(policies, n_ost, n_jobs, duration_s, window_ticks,
     """
     cfg = FleetConfig(control="coded", window_ticks=window_ticks,
                       telemetry="trajectory", coded_policies=policies)
-    run = build_trajectory_runner(cfg)
     codes = jnp.arange(len(policies), dtype=jnp.int32)
     scn = random_fleet(seed, n_ost=n_ost, n_jobs=n_jobs, profile="mixed",
                        duration_s=duration_s)
@@ -170,8 +166,8 @@ def recovery_times(policies, n_ost, n_jobs, duration_s, window_ticks,
     cap_total = float(np.asarray(scn.capacity_per_tick).sum()) * window_ticks
     n_down = max(1, int(round(down_frac * n_ost)))
     base_plan = faults.no_faults(n_windows, n_ost)
-    served_base = np.asarray(jax.block_until_ready(
-        run(*_scenario_args(scn), _jplan(base_plan), codes)))
+    served_base = np.asarray(jax.block_until_ready(run_trajectory_batch(
+        cfg, _scenario_args(scn), _jplan(base_plan), codes)))
     util_base = served_base.sum(axis=(2, 3)) / cap_total      # [C, W]
     out = {}
     for severity, knobs in SEVERITIES.items():
@@ -182,8 +178,8 @@ def recovery_times(policies, n_ost, n_jobs, duration_s, window_ticks,
         w1 = w0 + dur
         plan = faults.outage(n_windows, n_ost, w0, w1,
                              osts=np.arange(n_down))
-        served_c = np.asarray(jax.block_until_ready(
-            run(*_scenario_args(scn), _jplan(plan), codes)))  # [C, W, O, J]
+        served_c = np.asarray(jax.block_until_ready(run_trajectory_batch(
+            cfg, _scenario_args(scn), _jplan(plan), codes)))  # [C, W, O, J]
         util_w = served_c.sum(axis=(2, 3)) / cap_total        # [C, W]
         row = {}
         for ci, policy in enumerate(policies):

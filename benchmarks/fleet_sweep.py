@@ -2,11 +2,11 @@
 registered control policy in ONE vmapped, jitted invocation.
 
 Scenarios are padded to a common (T, O, J) shape and stacked on a scenario
-axis; the policy rides the traced ``control_code`` path of
-``simulate_fleet`` (the generic ``CodedPolicy`` combinator over the chosen
-subset), so the whole [S, C] grid is a single compiled program:
-
-    run = jit(vmap_scenarios(vmap_policies(simulate_fleet)))
+axis; the policy rides the traced ``control_code`` path (the generic
+``CodedPolicy`` combinator over the chosen subset).  The [S, C] grid is
+flattened to one fleet axis F = S*C -- scenario s repeated per policy,
+codes tiled per scenario -- and dispatched as a single compiled tenant
+batch through ``storage.simulate_tenants``.
 
 A policy registered via ``@register_policy`` shows up in the grid with no
 change here and none in the engine.  Emits a JSON report with utilization,
@@ -31,7 +31,6 @@ still compiles once).
 from __future__ import annotations
 
 import argparse
-import functools
 import json
 import time
 
@@ -46,7 +45,7 @@ from repro.storage import (
     list_policies,
     random_fleet,
     scengen,
-    simulate_fleet,
+    simulate_tenants,
 )
 from repro.storage import metrics
 
@@ -85,22 +84,31 @@ def stack_scenarios(scenarios):
             jnp.asarray(caps), jnp.asarray(backlog))
 
 
-@functools.lru_cache(maxsize=None)
-def build_sweep(cfg: FleetConfig):
-    """One compiled program over [scenario, mode]: returns served/demand
+def run_grid(cfg: FleetConfig, args, codes):
+    """The [S, C] grid as ONE tenant batch (F = S*C): scenario arrays
+    repeated per policy, policy codes tiled per scenario, dispatched
+    through ``storage.simulate_tenants``.  Returns served/demand
     trajectories of shape [S, C, W, O, J].
 
-    Cached on the (hashable) config: repeated invocations -- several sweeps
-    in one process, or sweep() called from other harnesses -- reuse the
-    jitted callable instead of re-wrapping ``simulate_fleet`` in fresh
-    ``jit(vmap(vmap(...)))`` objects whose compilation cache would miss."""
-    def run_one(nodes, rates, vol, caps, backlog, code):
-        res = simulate_fleet(cfg, nodes, rates, vol, caps, backlog,
-                             control_code=code)
-        return res.served, res.demand
-    over_modes = jax.vmap(run_one, in_axes=(None, None, None, None, None, 0))
-    over_scenarios = jax.vmap(over_modes, in_axes=(0, 0, 0, 0, 0, None))
-    return jax.jit(over_scenarios)
+    ``simulate_tenants`` is jitted on (cfg, n_fleets), so repeated
+    invocations -- several sweeps in one process, or sweep() called from
+    other harnesses -- reuse the compiled program."""
+    nodes, rates, vol, caps, backlog = args
+    s_count, c_count = nodes.shape[0], codes.shape[0]
+    # the stacked nodes are [S, J]; the batched entry point reads rank-2 as
+    # a *shared* [O, J], so lift to the explicit per-fleet [S, O, J] form
+    nodes = jnp.broadcast_to(nodes[:, None, :],
+                             (s_count, rates.shape[2], nodes.shape[1]))
+
+    def rep(x):
+        return jnp.repeat(x, c_count, axis=0)
+
+    res = simulate_tenants(cfg, rep(nodes), rep(rates), rep(vol),
+                           capacity_per_tick=rep(caps),
+                           max_backlog=rep(backlog),
+                           control_code=jnp.tile(codes, s_count))
+    grid = (s_count, c_count) + res.served.shape[1:]
+    return res.served.reshape(grid), res.demand.reshape(grid)
 
 
 def generator_grid(profiles, gen_count: int, gen_seed0: int, gen_ost: int,
@@ -134,9 +142,8 @@ def sweep(duration_s: float = 20.0, window_ticks: int = 10,
     args = stack_scenarios(scenarios)
     codes = jnp.arange(len(policies), dtype=jnp.int32)
 
-    run = build_sweep(cfg)
     t0 = time.perf_counter()
-    served, demand = jax.block_until_ready(run(*args, codes))
+    served, demand = jax.block_until_ready(run_grid(cfg, args, codes))
     wall_s = time.perf_counter() - t0
 
     served = np.asarray(served)   # [S, C, W, O, J]

@@ -8,9 +8,11 @@ looks good on four curated scenarios but collapses on seed 13 of the
 saturation profile is exactly what the paper's "even under extreme
 conditions" claim must exclude.
 
-Per seed, all policies run as ONE coded/vmapped streaming invocation
-(same trick as ``fleet_sweep``), so the grid reuses a single compiled
-program across every seed -- the arrays change, the shapes do not.
+Per seed, all policies run as ONE coded streaming invocation through the
+tenant axis (``storage.simulate_tenants``: scenario arrays shared, policy
+codes batched -- the [J]/[T, O, J] inputs are never copied per policy), so
+the grid reuses a single compiled program across every seed -- the arrays
+change, the shapes do not.
 Streaming telemetry keeps the memory flat regardless of horizon, which is
 what makes the committed (O=64, J=1024) x 16-seed artifact
 (``BENCH_scenario_sweep.json``) tractable on CPU.
@@ -30,7 +32,6 @@ Run:  PYTHONPATH=src python benchmarks/scenario_sweep.py \
 from __future__ import annotations
 
 import argparse
-import functools
 import json
 import time
 
@@ -44,21 +45,21 @@ from repro.storage import (
     metrics,
     random_fleet,
     scengen,
-    simulate_fleet,
+    simulate_tenants,
 )
 from _harness import provenance
 
 
-@functools.lru_cache(maxsize=None)
-def build_runner(cfg: FleetConfig):
-    """One compiled streaming program over the policy-code axis: returns
-    (StreamStats with a leading [C] axis, queue_final [C, O, J])."""
-    def run_one(nodes, rates, vol, caps, backlog, code):
-        res = simulate_fleet(cfg, nodes, rates, vol, caps, backlog,
-                             control_code=code)
-        return res.stats, res.queue_final
-    return jax.jit(jax.vmap(run_one, in_axes=(None, None, None, None,
-                                              None, 0)))
+def run_policy_batch(cfg: FleetConfig, args, codes):
+    """One compiled streaming program over the policy-code axis via the
+    tenant entry point (scenario arrays shared, codes batched): returns
+    (StreamStats with a leading [C] axis, queue_final [C, O, J]).
+    ``simulate_tenants`` is jitted on (cfg, n_fleets), so every seed of a
+    sweep reuses one compilation."""
+    nodes, rates, vol, caps, backlog = args
+    res = simulate_tenants(cfg, nodes, rates, vol, capacity_per_tick=caps,
+                           max_backlog=backlog, control_code=codes)
+    return res.stats, res.queue_final
 
 
 def _metrics_for(stats, nodes, cap_w):
@@ -88,7 +89,6 @@ def sweep(profile: str = "mixed", seeds: int = 16, seed0: int = 0,
     policies = tuple(policies) if policies else tuple(list_policies())
     cfg = FleetConfig(control="coded", window_ticks=window_ticks,
                       telemetry="streaming", coded_policies=policies)
-    run = build_runner(cfg)
     codes = jnp.arange(len(policies), dtype=jnp.int32)
 
     per_seed = []
@@ -100,7 +100,7 @@ def sweep(profile: str = "mixed", seeds: int = 16, seed0: int = 0,
                 jnp.asarray(scn.volume), jnp.asarray(scn.capacity_per_tick),
                 jnp.asarray(scn.max_backlog))
         t0 = time.perf_counter()
-        stats_c, _ = jax.block_until_ready(run(*args, codes))
+        stats_c, _ = jax.block_until_ready(run_policy_batch(cfg, args, codes))
         wall = time.perf_counter() - t0
         wall_total += wall
         cap_w = np.asarray(scn.capacity_per_tick) * window_ticks

@@ -33,6 +33,35 @@ def ost_mesh(n_devices: Optional[int] = None) -> jax.sharding.Mesh:
     return jax.sharding.Mesh(np.array(devices), ("ost",))
 
 
+def fleet_ost_mesh(shape: Optional[tuple] = None) -> jax.sharding.Mesh:
+    """2-D ``(fleet, ost)`` mesh for the tenant-batched window engine
+    (``storage/tenants.simulate_tenants`` with ``partition="fleet_shard"``).
+
+    Axis 0 (``fleet``) splits independent tenant control loops -- no
+    communication ever crosses it; axis 1 (``ost``) splits each fleet's
+    OST rows exactly like the 1-D ``ost_mesh`` and carries the one
+    per-window busy-OST ``psum``, which therefore stays inside each
+    fleet's mesh slice.
+
+    ``shape`` is ``(n_fleet_devices, n_ost_devices)``; its product may be
+    a prefix of the visible devices (like ``ost_mesh(n_devices)``).  The
+    default puts every device on the fleet axis -- tenant counts dwarf
+    per-fleet OST counts, so fleet parallelism is the axis that scales.
+    """
+    devices = jax.devices()
+    if shape is None:
+        shape = (len(devices), 1)
+    n_fleet, n_ost = shape
+    if n_fleet < 1 or n_ost < 1:
+        raise ValueError(f"fleet_ost_mesh: axes must be >= 1, got {shape}")
+    if n_fleet * n_ost > len(devices):
+        raise ValueError(
+            f"fleet_ost_mesh: shape {shape} needs {n_fleet * n_ost} "
+            f"devices, have {len(devices)}")
+    grid = np.array(devices[: n_fleet * n_ost]).reshape(n_fleet, n_ost)
+    return jax.sharding.Mesh(grid, ("fleet", "ost"))
+
+
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")

@@ -26,6 +26,7 @@ from repro.storage.simulator import (
     window_step,
 )
 from repro.storage.service import FleetService, IngestResult
+from repro.storage.tenants import simulate_tenants
 from repro.storage import faults
 from repro.storage.faults import FaultPlan, no_faults, random_fault_plan
 from repro.storage.scengen import (
@@ -87,6 +88,7 @@ __all__ = [
     "init_carry",
     "simulate",
     "simulate_fleet",
+    "simulate_tenants",
     "utilization",
     "window_step",
     "PROFILES",

@@ -37,6 +37,11 @@ def priority_normalized_throughput(served_wj, nodes) -> np.ndarray:
     served = np.asarray(served_wj, np.float64)
     total = served.reshape(-1, served.shape[-1]).sum(axis=0)
     share = np.asarray(nodes, np.float64)
+    if share.ndim == 2:
+        # engine-shaped [O, J] nodes: a job's priority weight is its row
+        # sum (shares are normalized below, so nodes broadcast from [J]
+        # give exactly the [J] answer)
+        share = share.sum(axis=0)
     share = share / share.sum()
     return total / np.maximum(share, 1e-12)
 
@@ -83,10 +88,20 @@ def aggregate_mb(served) -> float:
 
 
 def p99_queue(demand, served) -> float:
-    """99th percentile of the per-window backlog growth (demand - served),
-    a proxy for tail latency pressure."""
+    """99th percentile of the standing per-window backlog (demand - served,
+    clipped at zero), a proxy for tail latency pressure.
+
+    Semantics (audited, DESIGN.md section 13): the engine's per-window
+    ``demand`` signal is served + the queue standing at window end, so
+    ``demand - served`` *is* the carried backlog -- queues persisting
+    across windows are already counted in every later window, not just the
+    window that grew them (pinned against a reconstructed per-window queue
+    trajectory in ``tests/test_metrics.py``).  The clip removes the f32
+    accumulation noise that could otherwise drive the difference a hair
+    negative on drained fleets; backlog is never negative.
+    """
     lag = np.asarray(demand, np.float64) - np.asarray(served, np.float64)
-    return float(np.percentile(lag.ravel(), 99))
+    return float(np.percentile(np.maximum(lag, 0.0).ravel(), 99))
 
 
 def utilization(result, cfg, capacity_per_tick=None):
@@ -112,22 +127,30 @@ def job_slowdown(served_wj, capacity_per_window) -> np.ndarray:
     the ideal is the windows its total data would need at the full capacity
     of the targets it actually touched (its stripe set), floored at one
     window (the simulator's resolution).  1.0 = the job ran as if alone;
-    NaN = the job was never served.  served_wj: [W, J] or [W, O, J];
-    capacity_per_window: scalar or [O].
+    NaN = the job was never served.  served_wj: [W, J], [W, O, J], or any
+    leading batch axes over those ([F, W, O, J] from ``simulate_tenants``
+    -- rank >= 3 always reads the trailing axes as [W, O, J]);
+    capacity_per_window: scalar, [O], or [F, O].  Returns [..., J].
+
+    One broadcast path for every rank: the old scalar branch coerced with
+    ``float(capacity_per_window)``, which raised on per-OST [O] arrays
+    and on any batched input.
     """
     s = np.asarray(served_wj, np.float64)
-    if s.ndim == 3:
-        cap = np.broadcast_to(
-            np.asarray(capacity_per_window, np.float64), (s.shape[1],))
-        per_oj = s.sum(axis=0)                              # [O, J]
-        eff_cap = (cap[:, None] * (per_oj > 0)).sum(axis=0)  # stripe-set cap
-        s = s.sum(axis=1)                                   # [W, J]
+    cap = np.asarray(capacity_per_window, np.float64)
+    if s.ndim >= 3:  # [..., W, O, J]
+        cap = np.broadcast_to(cap, s.shape[:-3] + (s.shape[-2],))
+        per_oj = s.sum(axis=-3)                               # [..., O, J]
+        eff_cap = (cap[..., None] * (per_oj > 0)).sum(axis=-2)  # stripe set
+        s = s.sum(axis=-2)                                    # [..., W, J]
     else:
-        eff_cap = float(capacity_per_window)
-    total = s.sum(axis=0)
+        # [W, J] carries no stripe info: the ideal runs at the summed
+        # capacity of all targets (for the single-target view, the scalar)
+        eff_cap = cap.sum() if cap.ndim else cap
+    total = s.sum(axis=-2)
     any_w = s > 0
-    last = np.where(any_w.any(axis=0),
-                    s.shape[0] - 1 - any_w[::-1].argmax(axis=0), -1)
+    last = np.where(any_w.any(axis=-2),
+                    s.shape[-2] - 1 - any_w[..., ::-1, :].argmax(axis=-2), -1)
     ideal = total / np.maximum(eff_cap, 1e-12)
     return np.where(total > 0, (last + 1) / np.maximum(ideal, 1.0), np.nan)
 
@@ -136,13 +159,37 @@ def job_slowdown(served_wj, capacity_per_window) -> np.ndarray:
 #
 # Finalizers over a ``telemetry.StreamStats`` carry.  Stats arrays are
 # [O, J] from ``simulate_fleet`` and [J] from the single-target squeeze;
-# every function accepts both.
+# every function accepts both, plus any *leading batch axes* over those
+# (an [F, O, J] carry from ``simulate_tenants``): reductions run over the
+# trailing row axes only, and scalar-returning finalizers return an [F]
+# (or [F1, F2, ...]) array per fleet.  The old host-side coercions
+# (``int(stats.busy_windows)``, ``float(_ksum(...).sum())``) crashed or
+# silently collapsed the fleet axis; batched finalizer values are pinned
+# against the per-fleet-loop values in ``tests/test_metrics.py``.
 
 
 def _ksum(stats, field):
     """A compensated sum field + its Kahan residual, in float64."""
     return (np.asarray(getattr(stats, field), np.float64)
             + np.asarray(getattr(stats.comp, field), np.float64))
+
+
+def _lead_shape(stats) -> tuple:
+    """The leading batch axes of a carry: ``windows`` is a scalar in an
+    unbatched carry and carries exactly the fleet axes in a batched one
+    (``telemetry.stats_pspecs``), so its shape *is* the batch shape."""
+    return np.asarray(stats.windows).shape
+
+
+def _index_stats(stats, idx):
+    """The single-fleet slice of a batched carry at leading index ``idx``."""
+    vals = []
+    for name, leaf in zip(stats._fields, stats):
+        if name == "comp":
+            vals.append(type(leaf)(*(np.asarray(x)[idx] for x in leaf)))
+        else:
+            vals.append(np.asarray(leaf)[idx])
+    return type(stats)(*vals)
 
 
 def _per_job(stats):
@@ -155,37 +202,71 @@ def _per_job(stats):
     return served, demand, last, False
 
 
-def streaming_aggregate_mb(stats) -> float:
-    """Total data moved (1 RPC = 1 MB); twin of ``aggregate_mb``."""
-    return float(_ksum(stats, "served_sum").sum())
+def streaming_aggregate_mb(stats):
+    """Total data moved (1 RPC = 1 MB); twin of ``aggregate_mb``.  Returns
+    a float, or [F] totals for a batched carry."""
+    served = _ksum(stats, "served_sum")
+    lead = _lead_shape(stats)
+    total = served.sum(axis=tuple(range(len(lead), served.ndim)))
+    return total if lead else float(total)
 
 
-def streaming_fairness(stats, nodes) -> float:
+def streaming_fairness(stats, nodes):
     """Twin of ``fairness`` over the whole horizon: Jain index of
-    priority-normalized total throughput, demand-based participation."""
+    priority-normalized total throughput, demand-based participation.
+
+    ``nodes``: [J] or engine-shaped [O, J] shared, or batched with the
+    carry's leading axes ([F, J] / [F, O, J] -- pass the same array you
+    gave ``simulate_tenants``).  A leading-axes match breaks the
+    [F, J]-vs-[O, J] rank tie in favor of per-fleet.  Participation
+    masks are data-dependent per fleet, so the batched value is defined
+    as the stack of per-fleet values."""
+    lead = _lead_shape(stats)
+    if lead:
+        nodes = np.asarray(nodes, np.float64)
+        per_fleet_nodes = (nodes.ndim == len(lead) + 2
+                           or (nodes.ndim == len(lead) + 1
+                               and nodes.shape[:len(lead)] == lead))
+        out = [streaming_fairness(_index_stats(stats, i),
+                                  nodes[i] if per_fleet_nodes else nodes)
+               for i in np.ndindex(lead)]
+        return np.asarray(out).reshape(lead)
     served, demand, _, _ = _per_job(stats)
     norm = priority_normalized_throughput(served, nodes)
     return jain_index(norm[demand > 0])
 
 
-def streaming_mean_utilization(stats, busy_only: bool = True) -> float:
+def streaming_mean_utilization(stats, busy_only: bool = True):
     """Twin of ``mean_utilization`` (same busy-window semantics).
 
     A fleet-idle window contributes zero utilization on every OST, so the
     sum of per-window fleet means over *busy* windows equals the fleet mean
     of the per-OST ``util_sum`` rows -- which is all the carry keeps (the
     per-OST layout is what makes the carry OST-shardable, DESIGN.md
-    section 8)."""
-    if busy_only and int(stats.busy_windows) > 0:
-        return float(_ksum(stats, "util_sum").mean()) / int(stats.busy_windows)
-    windows = max(int(stats.windows), 1)
-    return float(_ksum(stats, "util_sum").mean()) / windows
+    section 8).  Reductions run over the trailing row axes only, so a
+    batched carry yields per-fleet means (each fleet selecting its own
+    busy-vs-total denominator)."""
+    util = _ksum(stats, "util_sum")
+    lead = _lead_shape(stats)
+    trail = tuple(range(len(lead), util.ndim))
+    util_mean = util.mean(axis=trail) if trail else util
+    busy = np.asarray(stats.busy_windows, np.float64)
+    windows = np.maximum(np.asarray(stats.windows, np.float64), 1.0)
+    denom = np.where(np.logical_and(busy_only, busy > 0), busy, windows)
+    out = util_mean / denom
+    return out if lead else float(out)
 
 
-def streaming_p99_queue(stats, q: float = 99.0) -> float:
+def streaming_p99_queue(stats, q: float = 99.0):
     """Twin of ``p99_queue`` from the log-spaced backlog histogram: returns
     the upper edge of the bin holding the q-th percentile (within one bin
-    width, ~16%/bin at the default 128-bin resolution)."""
+    width, ~16%/bin at the default 128-bin resolution).  Per-fleet edges
+    for a batched carry (the quantile search is data-dependent)."""
+    lead = _lead_shape(stats)
+    if lead:
+        out = [streaming_p99_queue(_index_stats(stats, i), q)
+               for i in np.ndindex(lead)]
+        return np.asarray(out).reshape(lead)
     hist = _ksum(stats, "lag_hist")
     if hist.ndim == 2:  # fleet carry keeps one histogram row per OST
         hist = hist.sum(axis=0)
@@ -197,14 +278,27 @@ def streaming_p99_queue(stats, q: float = 99.0) -> float:
 
 
 def streaming_job_slowdown(stats, capacity_per_window) -> np.ndarray:
-    """Twin of ``job_slowdown`` from carry-resident statistics."""
+    """Twin of ``job_slowdown`` from carry-resident statistics.
+
+    ``capacity_per_window``: scalar or [O] shared, or batched with the
+    carry's leading axes ([F, O]).  Returns [..., J]."""
+    lead = _lead_shape(stats)
+    if lead:
+        cap = np.asarray(capacity_per_window, np.float64)
+        per_fleet_cap = cap.ndim == len(lead) + 1
+        out = [streaming_job_slowdown(_index_stats(stats, i),
+                                      cap[i] if per_fleet_cap else cap)
+               for i in np.ndindex(lead)]
+        return np.asarray(out).reshape(lead + out[0].shape)
     served, _, last, fleet = _per_job(stats)
+    cap = np.asarray(capacity_per_window, np.float64)
     if fleet:
         per_oj = _ksum(stats, "served_sum")
-        cap = np.broadcast_to(
-            np.asarray(capacity_per_window, np.float64), (per_oj.shape[0],))
+        cap = np.broadcast_to(cap, (per_oj.shape[0],))
         eff_cap = (cap[:, None] * (per_oj > 0)).sum(axis=0)
     else:
-        eff_cap = float(capacity_per_window)
+        # same broadcast unification as ``job_slowdown``: [J] stats carry
+        # no stripe info, so an [O] capacity sums to the total ideal rate
+        eff_cap = cap.sum() if cap.ndim else cap
     ideal = served / np.maximum(eff_cap, 1e-12)
     return np.where(served > 0, (last + 1) / np.maximum(ideal, 1.0), np.nan)

@@ -144,13 +144,24 @@ def stream_stats_leaf_paths() -> Tuple[str, ...]:
     return tuple(jax.tree_util.keystr(path) for path, _ in flat)
 
 
-def stats_pspecs(axis: str):
+def stats_pspecs(axis: str, lead: Optional[str] = None):
     """A ``StreamStats`` of ``PartitionSpec``s for ``shard_map`` out_specs:
-    everything row-sharded over ``axis`` except the two scalar counters."""
+    everything row-sharded over ``axis`` except the two scalar counters.
+
+    ``lead`` names an optional *leading fleet axis* (the tenant batch of
+    ``storage/tenants.simulate_tenants``): every leaf -- the two int32
+    counters included, which are per-fleet ``[F]`` arrays in a batched
+    carry -- gains that axis in front of its row layout.  This is the
+    fleet extension of the row-locality contract: a batched carry is F
+    independent single-fleet carries stacked, so the per-OST layout (and
+    the bitwise sharded==unsharded argument that rides on it) is
+    unchanged within each fleet slice.
+    """
     from jax.sharding import PartitionSpec as P
-    oj = P(axis, None)
-    o = P(axis)
-    rep = P()
+    front = (lead,) if lead is not None else ()
+    oj = P(*front, axis, None)
+    o = P(*front, axis)
+    rep = P(*front)
     return StreamStats(
         windows=rep,
         served_sum=oj, served_sumsq=oj,

@@ -1,0 +1,160 @@
+"""Subprocess worker for ``tests/test_tenants.py``: proves the 2-D
+``(fleet, ost)``-sharded tenant batch bitwise-equal to unsharded execution
+under a forced host device count.
+
+Must be a fresh process because the XLA device count is fixed at backend
+initialization -- the parent test sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before spawning.
+
+Three proofs, any mismatch exits nonzero with the offending key:
+
+1. every mesh factorization of the forced device count (on 4 devices:
+   4x1 fleet-only, 2x2 mixed, 1x4 ost-only), ``partition="fleet_shard"``
+   vs the in-process unsharded (``partition="none"``) reference, both
+   telemetry modes, per-fleet coded policies + per-fleet fault plans --
+   the hardest case (different control program AND different chaos
+   timeline on every fleet slice);
+2. shared-argument broadcasting survives sharding: all-shared inputs with
+   ``n_fleets`` produce identical fleet slices, sharded or not;
+3. the divisibility guards: a fleet count that does not divide the mesh
+   fleet axis (or an OST count that does not divide the ost axis) must
+   raise, not silently mis-shard.
+"""
+import argparse
+import sys
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policies import list_policies
+from repro.storage import (FleetConfig, no_faults, random_fleet,
+                           simulate_tenants)
+
+#: shared with tests/test_tenants.py (which imports them from here, so the
+#: parent's in-process oracle and the forced-mesh legs cannot drift apart)
+TENANT_F = 4
+TENANT_O = 4
+TENANT_J = 6
+TENANT_DURATION_S = 1.0
+#: the FULL registry as a coded set (the default trio is a subset) -- the
+#: oracle must cover every policy, not just the benchmark defaults
+ALL_POLICIES = tuple(sorted(list_policies()))
+
+
+def tenant_args(f=TENANT_F, o=TENANT_O, j=TENANT_J):
+    """A batched tenant problem: per-fleet scenarios, per-fleet coded
+    policies (cycling the registry), per-fleet fault plans."""
+    scen = [random_fleet(seed=i, n_ost=o, n_jobs=j,
+                         duration_s=TENANT_DURATION_S) for i in range(f)]
+    nodes = jnp.stack([jnp.broadcast_to(
+        jnp.asarray(s.nodes, jnp.float32), (o, j)) for s in scen])
+    rates = jnp.stack([jnp.asarray(s.issue_rate, jnp.float32) for s in scen])
+    volume = jnp.stack([jnp.asarray(s.volume, jnp.float32) for s in scen])
+    cap = jnp.stack([jnp.asarray(s.capacity_per_tick, jnp.float32)
+                     for s in scen])
+    codes = jnp.asarray([i % len(ALL_POLICIES) for i in range(f)],
+                        jnp.int32)
+    return nodes, rates, volume, cap, codes
+
+
+def tenant_fault_plan(cfg, f=TENANT_F, o=TENANT_O):
+    t_total = int(round(TENANT_DURATION_S / cfg.tick_seconds))
+    w = t_total // cfg.window_ticks
+    base = no_faults(w, o)
+    # distinct per-fleet chaos: fleet i drops OST i%o for the middle third
+    up = np.ones((f, w, o), np.float32)
+    up[np.arange(f), :, np.arange(f) % o] = np.where(
+        (np.arange(w) >= w // 3) & (np.arange(w) < 2 * w // 3), 0.0, 1.0)
+    return type(base)(up=jnp.asarray(up),
+                      cap_scale=jnp.broadcast_to(base.cap_scale, (f, w, o)),
+                      telem_ok=jnp.broadcast_to(base.telem_ok, (f, w, o)))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--devices", type=int, required=True)
+    args = ap.parse_args()
+
+    if jax.device_count() != args.devices:
+        print(f"FATAL: expected {args.devices} forced host devices, "
+              f"got {jax.device_count()} (XLA_FLAGS not applied?)")
+        return 2
+
+    nodes, rates, volume, cap, codes = tenant_args()
+    failures = []
+    shapes = [(fd, args.devices // fd)
+              for fd in range(1, args.devices + 1) if args.devices % fd == 0]
+
+    # -- proof 1: every mesh factorization x telemetry, coded + faulted
+    for telemetry in ("trajectory", "streaming"):
+        base_cfg = FleetConfig(control="coded", telemetry=telemetry,
+                               coded_policies=ALL_POLICIES)
+        plan = tenant_fault_plan(base_cfg)
+        ref = simulate_tenants(base_cfg, nodes, rates, volume,
+                               capacity_per_tick=cap, control_code=codes,
+                               fault_plan=plan)
+        for shape in shapes:
+            cfg = base_cfg._replace(partition="fleet_shard")
+            got = simulate_tenants(cfg, nodes, rates, volume,
+                                   capacity_per_tick=cap,
+                                   control_code=codes, fault_plan=plan,
+                                   mesh_shape=shape)
+            for i, (a, b) in enumerate(zip(jax.tree.leaves(ref),
+                                           jax.tree.leaves(got))):
+                a, b = np.asarray(a), np.asarray(b)
+                if not (a.shape == b.shape and np.array_equal(a, b)):
+                    key = f"{telemetry}/mesh{shape}/leaf{i}"
+                    failures.append(key)
+                    print(f"MISMATCH {key}")
+
+    # -- proof 2: shared-arg broadcasting under sharding
+    ref = simulate_tenants(FleetConfig(), nodes[0], rates[0], volume[0],
+                           capacity_per_tick=cap[0], n_fleets=TENANT_F)
+    got = simulate_tenants(FleetConfig(partition="fleet_shard"),
+                           nodes[0], rates[0], volume[0],
+                           capacity_per_tick=cap[0], n_fleets=TENANT_F,
+                           mesh_shape=shapes[-1])
+    for i, (a, b) in enumerate(zip(jax.tree.leaves(ref),
+                                   jax.tree.leaves(got))):
+        if not np.array_equal(np.asarray(a), np.asarray(b)):
+            failures.append(f"shared/leaf{i}")
+            print(f"MISMATCH shared/leaf{i}")
+
+    # -- proof 3: divisibility guards (only observable on a real mesh)
+    if args.devices > 1:
+        fd = [s for s in shapes if s[0] > 1][0]
+        try:
+            simulate_tenants(FleetConfig(partition="fleet_shard"),
+                             nodes[: fd[0] + 1], rates[: fd[0] + 1],
+                             volume[: fd[0] + 1], mesh_shape=fd)
+            failures.append("fleet-divisibility-guard-missing")
+            print("MISMATCH fleet divisibility guard did not raise")
+        except ValueError:
+            pass
+        od = [s for s in shapes if s[1] > 1][-1]
+        try:
+            simulate_tenants(
+                FleetConfig(partition="fleet_shard"),
+                jnp.ones((2, od[1] + 1, 3), jnp.float32),
+                jnp.ones((2, 20, od[1] + 1, 3), jnp.float32),
+                jnp.full((2, od[1] + 1, 3), jnp.inf, jnp.float32),
+                mesh_shape=od)
+            failures.append("ost-divisibility-guard-missing")
+            print("MISMATCH ost divisibility guard did not raise")
+        except ValueError:
+            pass
+
+    if failures:
+        print(f"FAILED: {len(failures)} mismatches on "
+              f"{args.devices} devices")
+        return 1
+    print(f"OK: fleet_shard == unsharded bitwise on {args.devices} devices "
+          f"({len(shapes)} mesh shapes x 2 telemetry modes, coded + "
+          f"per-fleet faults)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,284 @@
+"""Direct unit suite for ``storage/metrics.py``.
+
+Three jobs:
+
+1. **Regression coverage for the PR-10 bugfix sweep** -- each test here
+   failed on the pre-fix module:
+   * ``job_slowdown`` coerced ``float(capacity_per_window)`` in its
+     scalar branch, raising on per-OST [O] arrays and on batched
+     [F, W, O, J] input;
+   * the ``streaming_*`` finalizers coerced ``int(stats.busy_windows)``
+     / ``float(_ksum(...))``, crashing on a batched [F]-leading carry;
+   * ``p99_queue`` could go negative on drained fleets (f32 noise in
+     ``demand - served``) and its docstring misread the engine's demand
+     signal as per-window growth.
+2. **Edge cases** the benchmark sweeps can hit: empty/all-zero fleets,
+   zero-demand fairness, ``busy_only`` with no busy window, NaN-freedom.
+3. **The p99 semantics pin**: ``demand - served`` IS the standing
+   carried backlog, proved against an independently reconstructed
+   per-window queue trajectory.
+
+Parametrized over trajectory metrics and their streaming twins wherever
+both exist.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.storage import FleetConfig, metrics, simulate_fleet, simulate_tenants
+from repro.storage.scengen import random_fleet
+
+O, J, T = 4, 6, 200
+DUR = T * 0.01
+
+
+@pytest.fixture(scope="module")
+def fleet_run():
+    """One fleet, both telemetry modes, plus its inputs."""
+    s = random_fleet(seed=3, n_ost=O, n_jobs=J, duration_s=DUR)
+    args = (jnp.broadcast_to(jnp.asarray(s.nodes, jnp.float32), (O, J)),
+            jnp.asarray(s.issue_rate, jnp.float32),
+            jnp.asarray(s.volume, jnp.float32))
+    cap = jnp.asarray(s.capacity_per_tick, jnp.float32)
+    traj = simulate_fleet(FleetConfig(), *args, capacity_per_tick=cap)
+    stream = simulate_fleet(FleetConfig(telemetry="streaming"), *args,
+                            capacity_per_tick=cap)
+    return {"scenario": s, "args": args, "cap": cap,
+            "traj": traj, "stream": stream}
+
+
+@pytest.fixture(scope="module")
+def batched_run():
+    """F=3 heterogeneous fleets batched, plus the per-fleet loop."""
+    F = 3
+    scen = [random_fleet(seed=i, n_ost=O, n_jobs=J, duration_s=DUR)
+            for i in range(F)]
+    nodes = jnp.stack([jnp.broadcast_to(
+        jnp.asarray(s.nodes, jnp.float32), (O, J)) for s in scen])
+    rates = jnp.stack([jnp.asarray(s.issue_rate, jnp.float32)
+                       for s in scen])
+    volume = jnp.stack([jnp.asarray(s.volume, jnp.float32) for s in scen])
+    cap = jnp.stack([jnp.asarray(s.capacity_per_tick, jnp.float32)
+                     for s in scen])
+    out = {}
+    for mode in ("trajectory", "streaming"):
+        cfg = FleetConfig(telemetry=mode)
+        out[mode] = simulate_tenants(cfg, nodes, rates, volume,
+                                     capacity_per_tick=cap)
+        out[f"{mode}_loop"] = [
+            simulate_fleet(cfg, nodes[i], rates[i], volume[i],
+                           capacity_per_tick=cap[i]) for i in range(F)]
+    out["F"], out["nodes"], out["cap"] = F, nodes, cap
+    return out
+
+
+# ------------------------------------------ satellite 1: job_slowdown caps
+
+
+def test_job_slowdown_accepts_per_ost_capacity(fleet_run):
+    """[O] capacity with [W, O, J] served: the broadcast branch (always
+    worked) and the [W, J] branch (used to raise float() on the array)."""
+    cfg = FleetConfig()
+    cap_w = np.asarray(fleet_run["cap"]) * cfg.window_ticks
+    served = np.asarray(fleet_run["traj"].served)
+    sd_fleet = metrics.job_slowdown(served, cap_w)
+    assert sd_fleet.shape == (J,)
+    # [W, J] view with the same [O] capacity array: pre-fix this raised
+    # TypeError at float(capacity_per_window)
+    sd_flat = metrics.job_slowdown(served.sum(axis=1), cap_w)
+    assert sd_flat.shape == (J,)
+    assert np.nanmin(sd_flat) >= 1.0
+
+
+def test_job_slowdown_batched_leading_axis(batched_run):
+    """[F, W, O, J] + [F, O] capacity == the stack of per-fleet values
+    (pre-fix: TypeError on the rank-4 input)."""
+    cfg = FleetConfig()
+    cap_w = np.asarray(batched_run["cap"]) * cfg.window_ticks
+    served = np.asarray(batched_run["trajectory"].served)
+    sd = metrics.job_slowdown(served, cap_w)
+    assert sd.shape == (batched_run["F"], J)
+    for i in range(batched_run["F"]):
+        np.testing.assert_array_equal(
+            sd[i], metrics.job_slowdown(served[i], cap_w[i]), err_msg=f"f{i}")
+
+
+def test_job_slowdown_scalar_capacity_unchanged(fleet_run):
+    """The scalar path still matches the old semantics on [W, J]."""
+    served = np.asarray(fleet_run["traj"].served).sum(axis=1)
+    sd = metrics.job_slowdown(served, 80.0)
+    ref = metrics.job_slowdown(served[:, None, :], np.array([80.0]))
+    np.testing.assert_array_equal(sd, ref)
+
+
+# --------------------------------- satellite 2: batched stream finalizers
+
+
+def test_streaming_finalizers_batched_equal_per_fleet_loop(batched_run):
+    """Every finalizer on an [F]-leading carry == its per-fleet values
+    (pre-fix: int()/float() raised on the [F] counters)."""
+    stats = batched_run["streaming"].stats
+    loop_stats = [r.stats for r in batched_run["streaming_loop"]]
+    F, nodes, cap = batched_run["F"], batched_run["nodes"], batched_run["cap"]
+    cfg = FleetConfig()
+    cap_w = np.asarray(cap) * cfg.window_ticks
+
+    agg = metrics.streaming_aggregate_mb(stats)
+    fair = metrics.streaming_fairness(stats, np.asarray(nodes)[:, 0, :])
+    util = metrics.streaming_mean_utilization(stats)
+    util_all = metrics.streaming_mean_utilization(stats, busy_only=False)
+    p99 = metrics.streaming_p99_queue(stats)
+    slow = metrics.streaming_job_slowdown(stats, cap_w)
+    assert agg.shape == fair.shape == util.shape == p99.shape == (F,)
+    assert slow.shape == (F, J)
+    for i in range(F):
+        s_i = loop_stats[i]
+        assert agg[i] == metrics.streaming_aggregate_mb(s_i)
+        assert fair[i] == metrics.streaming_fairness(
+            s_i, np.asarray(nodes)[i, 0, :])
+        assert util[i] == metrics.streaming_mean_utilization(s_i)
+        assert util_all[i] == metrics.streaming_mean_utilization(
+            s_i, busy_only=False)
+        assert p99[i] == metrics.streaming_p99_queue(s_i)
+        np.testing.assert_array_equal(
+            slow[i], metrics.streaming_job_slowdown(s_i, cap_w[i]),
+            err_msg=f"f{i}")
+
+
+def test_streaming_fairness_accepts_engine_shaped_nodes(batched_run):
+    """The README contract: the same nodes array handed to
+    ``simulate_tenants`` works in the finalizer -- [F, O, J] batched and
+    [O, J] shared reduce to the per-job [J] priorities (pre-fix: the
+    rank check misread [F, O, J] as shared and the participation mask
+    crashed on the fleet axis)."""
+    stats = batched_run["streaming"].stats
+    nodes = np.asarray(batched_run["nodes"])              # [F, O, J]
+    fair = metrics.streaming_fairness(stats, nodes)
+    np.testing.assert_array_equal(
+        fair, metrics.streaming_fairness(stats, nodes[:, 0, :]))
+    one = batched_run["streaming_loop"][0].stats
+    assert metrics.streaming_fairness(one, nodes[0]) == \
+        metrics.streaming_fairness(one, nodes[0, 0])
+
+
+def test_streaming_finalizers_unbatched_return_floats(fleet_run):
+    """The unbatched API is unchanged: plain floats out."""
+    stats = fleet_run["stream"].stats
+    assert isinstance(metrics.streaming_aggregate_mb(stats), float)
+    assert isinstance(metrics.streaming_mean_utilization(stats), float)
+    assert isinstance(metrics.streaming_p99_queue(stats), float)
+
+
+# ----------------------------------------- satellite 3: p99_queue semantics
+
+
+def test_p99_queue_clipped_nonnegative():
+    """f32 noise can drive demand - served a hair negative on drained
+    fleets; backlog is never negative (pre-fix: the percentile leaked the
+    negative noise straight through on mostly-drained runs)."""
+    demand = np.zeros((50, 2, 3))
+    served = np.full((50, 2, 3), 1e-6)
+    assert metrics.p99_queue(demand, served) == 0.0
+
+
+def test_p99_queue_is_standing_backlog(fleet_run):
+    """The audit pin: the engine's demand signal is served + queue standing
+    at window end, so demand - served IS the carried backlog.  Reconstruct
+    the queue trajectory independently (simulate each window prefix and
+    read queue_final) and pin the percentile against it."""
+    cfg = FleetConfig()
+    s = fleet_run["scenario"]
+    args = fleet_run["args"]
+    res = fleet_run["traj"]
+    n_windows = np.asarray(res.served).shape[0]
+    lag = np.asarray(res.demand, np.float64) - np.asarray(res.served,
+                                                          np.float64)
+    queues = []
+    for w in (1, n_windows // 2, n_windows):
+        prefix = simulate_fleet(cfg, args[0], args[1][: w * cfg.window_ticks],
+                                args[2], capacity_per_tick=fleet_run["cap"])
+        queues.append(np.asarray(prefix.queue_final, np.float64))
+        np.testing.assert_allclose(lag[w - 1], queues[-1],
+                                   atol=1e-4, err_msg=f"window {w}")
+    # and therefore the metric equals the percentile of true backlogs
+    true_lag = np.maximum(lag, 0.0)
+    assert metrics.p99_queue(res.demand, res.served) == pytest.approx(
+        float(np.percentile(true_lag.ravel(), 99)))
+
+
+def test_streaming_p99_brackets_trajectory_p99(fleet_run):
+    """The histogram twin returns the enclosing bin's upper edge: it can
+    only round the true percentile *up*, never below."""
+    traj_p99 = metrics.p99_queue(fleet_run["traj"].demand,
+                                 fleet_run["traj"].served)
+    stream_p99 = metrics.streaming_p99_queue(fleet_run["stream"].stats)
+    assert stream_p99 >= traj_p99 - 1e-9
+
+
+# ------------------------------------------------- satellite 4: edge cases
+
+
+ZERO_WOJ = np.zeros((8, O, J))
+
+
+def _zero_stream_stats():
+    out = simulate_fleet(
+        FleetConfig(telemetry="streaming"),
+        jnp.ones((O, J), jnp.float32),
+        jnp.zeros((T, O, J), jnp.float32),
+        jnp.full((O, J), jnp.inf, jnp.float32))
+    return out.stats
+
+
+def test_zero_demand_fairness_is_one():
+    """No participants -> vacuously fair, both twins."""
+    assert metrics.fairness(ZERO_WOJ, np.ones(J), demand_wj=ZERO_WOJ) == 1.0
+    assert metrics.streaming_fairness(_zero_stream_stats(), np.ones(J)) == 1.0
+
+
+def test_jain_index_empty_and_zero():
+    assert metrics.jain_index(np.array([])) == 1.0
+    assert metrics.jain_index(np.zeros(5)) == 1.0
+    assert metrics.jain_index(np.ones(7)) == pytest.approx(1.0)
+
+
+def test_busy_only_utilization_with_no_busy_windows():
+    """An all-idle run must not divide by zero busy windows, both twins."""
+    assert metrics.mean_utilization(ZERO_WOJ, 100.0, busy_only=True) == 0.0
+    assert metrics.streaming_mean_utilization(
+        _zero_stream_stats(), busy_only=True) == 0.0
+
+
+def test_all_zero_fleet_nan_freedom():
+    """Every scalar metric on an all-zero fleet is finite; slowdown is
+    NaN per never-served job by contract, not by accident."""
+    assert np.isfinite(metrics.aggregate_mb(ZERO_WOJ))
+    assert np.isfinite(metrics.p99_queue(ZERO_WOJ, ZERO_WOJ))
+    assert np.isfinite(
+        metrics.mean_utilization(ZERO_WOJ, 100.0, busy_only=False))
+    sd = metrics.job_slowdown(ZERO_WOJ, 100.0)
+    assert np.isnan(sd).all()
+    stats = _zero_stream_stats()
+    assert np.isfinite(metrics.streaming_aggregate_mb(stats))
+    assert np.isfinite(metrics.streaming_p99_queue(stats))
+    assert np.isnan(metrics.streaming_job_slowdown(stats, 100.0)).all()
+
+
+def test_real_run_metrics_are_finite(fleet_run):
+    """NaN-freedom on a live heterogeneous run, trajectory x streaming."""
+    traj, stream = fleet_run["traj"], fleet_run["stream"]
+    cfg = FleetConfig()
+    cap_w = np.asarray(fleet_run["cap"]) * cfg.window_ticks
+    nodes_j = np.asarray(fleet_run["args"][0])[0]
+    vals = [
+        metrics.aggregate_mb(traj.served),
+        metrics.fairness(np.asarray(traj.served).sum(axis=1), nodes_j),
+        metrics.mean_utilization(traj.served, cap_w),
+        metrics.p99_queue(traj.demand, traj.served),
+        metrics.streaming_aggregate_mb(stream.stats),
+        metrics.streaming_fairness(stream.stats, nodes_j),
+        metrics.streaming_mean_utilization(stream.stats),
+        metrics.streaming_p99_queue(stream.stats),
+    ]
+    assert np.isfinite(vals).all()

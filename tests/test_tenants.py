@@ -1,0 +1,213 @@
+"""Tenant-axis golden suite: ``simulate_tenants`` must be a pure batching
+choice -- a batched run is bitwise a stack of per-fleet ``simulate_fleet``
+runs (all 5 policies x both telemetry modes x fault plans), and the 2-D
+``(fleet, ost)`` sharded path is bitwise the unsharded batch.
+
+The device count of an XLA host backend is fixed at process start, so the
+forced-4-device 2x2-mesh leg spawns a fresh interpreter running
+``tests/_tenant_worker.py`` (same pattern as ``test_sharding.py``).
+In-process tests cover whatever mesh the ambient session has: the CI leg
+that forces 4 host devices for the whole suite exercises the 2x2
+``(fleet, ost)`` factorization here without a subprocess.
+"""
+import os
+import pathlib
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _tenant_worker import (ALL_POLICIES, TENANT_F, tenant_args,
+                            tenant_fault_plan)
+from repro.core.policies import list_policies
+from repro.storage import FleetConfig, simulate_fleet, simulate_tenants
+
+HERE = pathlib.Path(__file__).parent
+SRC = HERE.parent / "src"
+
+
+def assert_trees_equal(batched, per_fleet_list, err=""):
+    """Every leaf of ``batched`` indexed at fleet i equals the matching
+    leaf of the i-th unbatched result, bitwise."""
+    got = jax.tree.leaves(batched)
+    for i, ref in enumerate(per_fleet_list):
+        for k, (g, r) in enumerate(zip(got, jax.tree.leaves(ref))):
+            g, r = np.asarray(g), np.asarray(r)
+            if g.shape == r.shape:  # unbatched metadata (window_seconds)
+                np.testing.assert_array_equal(
+                    g, r, err_msg=f"{err} leaf{k}")
+                continue
+            assert g.shape[1:] == r.shape, f"{err} fleet{i} leaf{k} shape"
+            np.testing.assert_array_equal(
+                g[i], r, err_msg=f"{err} fleet{i} leaf{k}")
+
+
+@pytest.fixture(scope="module")
+def tenants():
+    return tenant_args()
+
+
+@pytest.mark.parametrize("telemetry", ["trajectory", "streaming"])
+def test_batched_equals_per_fleet_loop_all_policies(telemetry, tenants):
+    """The headline oracle: one coded dispatch carrying every registered
+    policy on its own fleet == the per-fleet loop, bitwise, both telemetry
+    modes.  The coded combinator covers the full registry in one compile
+    (the same trick the benchmark sweeps rely on)."""
+    nodes, rates, volume, cap, _ = tenants
+    n_pol = len(ALL_POLICIES)
+    assert n_pol == len(list_policies())
+    codes = jnp.arange(n_pol, dtype=jnp.int32)
+    # one scenario shared, every policy batched: F = policy count
+    cfg = FleetConfig(control="coded", telemetry=telemetry,
+                      coded_policies=ALL_POLICIES)
+    batched = simulate_tenants(cfg, nodes[0], rates[0], volume[0],
+                               capacity_per_tick=cap[0], control_code=codes)
+    loop = [simulate_fleet(cfg, nodes[0], rates[0], volume[0],
+                           capacity_per_tick=cap[0], control_code=codes[i])
+            for i in range(n_pol)]
+    assert_trees_equal(batched, loop, err=telemetry)
+
+
+@pytest.mark.parametrize("telemetry", ["trajectory", "streaming"])
+def test_batched_heterogeneous_fleets(telemetry, tenants):
+    """Fully batched inputs -- different scenario on every fleet."""
+    nodes, rates, volume, cap, codes = tenants
+    cfg = FleetConfig(control="coded", telemetry=telemetry,
+                      coded_policies=ALL_POLICIES)
+    batched = simulate_tenants(cfg, nodes, rates, volume,
+                               capacity_per_tick=cap, control_code=codes)
+    loop = [simulate_fleet(cfg, nodes[i], rates[i], volume[i],
+                           capacity_per_tick=cap[i], control_code=codes[i])
+            for i in range(TENANT_F)]
+    assert_trees_equal(batched, loop, err=telemetry)
+
+
+def test_batched_equals_loop_with_fault_plans(tenants):
+    """Per-fleet chaos timelines ([F, W, O] plan leaves) stay bitwise: a
+    faulted tenant batch is the stack of faulted per-fleet runs."""
+    nodes, rates, volume, cap, codes = tenants
+    cfg = FleetConfig(control="coded", telemetry="streaming",
+                      coded_policies=ALL_POLICIES)
+    plan = tenant_fault_plan(cfg)
+    batched = simulate_tenants(cfg, nodes, rates, volume,
+                               capacity_per_tick=cap, control_code=codes,
+                               fault_plan=plan)
+    loop = [simulate_fleet(cfg, nodes[i], rates[i], volume[i],
+                           capacity_per_tick=cap[i], control_code=codes[i],
+                           fault_plan=jax.tree.map(lambda x: x[i], plan))
+            for i in range(TENANT_F)]
+    assert_trees_equal(batched, loop, err="faulted")
+
+
+def test_shared_args_broadcast(tenants):
+    """All-shared inputs + n_fleets: every fleet slice is the same run
+    (vmap in_axes=None never materializes F copies)."""
+    nodes, rates, volume, cap, _ = tenants
+    cfg = FleetConfig()
+    out = simulate_tenants(cfg, nodes[0], rates[0], volume[0],
+                           capacity_per_tick=cap[0], n_fleets=3)
+    one = simulate_fleet(cfg, nodes[0], rates[0], volume[0],
+                         capacity_per_tick=cap[0])
+    assert_trees_equal(out, [one, one, one], err="shared")
+
+
+def test_stream_stats_gain_leading_fleet_axis(tenants):
+    """The StreamStats contract extension: every leaf -- the int32
+    counters included -- carries a leading [F] in a batched carry."""
+    nodes, rates, volume, cap, _ = tenants
+    out = simulate_tenants(FleetConfig(telemetry="streaming"),
+                           nodes, rates, volume, capacity_per_tick=cap)
+    for leaf in jax.tree.leaves(out.stats):
+        assert np.asarray(leaf).shape[0] == TENANT_F
+    assert np.asarray(out.stats.windows).shape == (TENANT_F,)
+    assert np.asarray(out.stats.busy_windows).shape == (TENANT_F,)
+
+
+def test_fleet_shard_matches_unsharded_in_process(tenants):
+    """2-D sharded == unsharded on the ambient mesh: (2, 2) under the CI
+    leg that forces 4 host devices, (1, 1) in a plain run -- catches
+    partition-path regressions without paying a subprocess."""
+    nodes, rates, volume, cap, codes = tenants
+    n_dev = jax.device_count()
+    shape = (2, 2) if n_dev >= 4 else (1, 1)
+    cfg = FleetConfig(control="coded", telemetry="streaming",
+                      coded_policies=ALL_POLICIES)
+    ref = simulate_tenants(cfg, nodes, rates, volume,
+                           capacity_per_tick=cap, control_code=codes)
+    got = simulate_tenants(cfg._replace(partition="fleet_shard"),
+                           nodes, rates, volume, capacity_per_tick=cap,
+                           control_code=codes, mesh_shape=shape)
+    for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.slow
+def test_fleet_shard_bitwise_on_forced_4_devices():
+    """The full 2-D oracle on a forced 4-device backend: every (fleet,
+    ost) factorization -- 4x1, 2x2, 1x4 -- vs unsharded, coded + faulted,
+    plus the divisibility guards (see ``_tenant_worker.py``)."""
+    env = dict(os.environ)
+    kept = [f for f in env.get("XLA_FLAGS", "").split()
+            if not f.startswith("--xla_force_host_platform_device_count")]
+    env["XLA_FLAGS"] = " ".join(
+        kept + ["--xla_force_host_platform_device_count=4"])
+    env["JAX_PLATFORMS"] = "cpu"
+    env.setdefault("REPRO_FORCE_REF_KERNELS", "1")
+    env["PYTHONPATH"] = str(SRC) + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, str(HERE / "_tenant_worker.py"), "--devices", "4"],
+        capture_output=True, text=True, timeout=1200, env=env)
+    assert proc.returncode == 0, (
+        f"tenant worker failed on 4 devices:\n"
+        f"--- stdout ---\n{proc.stdout}\n--- stderr ---\n{proc.stderr}")
+    assert "OK: fleet_shard == unsharded bitwise" in proc.stdout
+
+
+# ------------------------------------------------------------- validation
+
+
+def test_all_shared_requires_n_fleets(tenants):
+    nodes, rates, volume, cap, _ = tenants
+    with pytest.raises(ValueError, match="n_fleets"):
+        simulate_tenants(FleetConfig(), nodes[0], rates[0], volume[0])
+
+
+def test_inconsistent_fleet_extents_rejected(tenants):
+    nodes, rates, volume, _, _ = tenants
+    with pytest.raises(ValueError, match="inconsistent"):
+        simulate_tenants(FleetConfig(), nodes[:2], rates[:3], volume[:2])
+    with pytest.raises(ValueError, match="inconsistent"):
+        simulate_tenants(FleetConfig(), nodes, rates, volume,
+                         n_fleets=TENANT_F + 1)
+
+
+def test_bad_ranks_rejected(tenants):
+    nodes, rates, volume, _, _ = tenants
+    with pytest.raises(ValueError, match="issue_rate"):
+        simulate_tenants(FleetConfig(), nodes, rates[0, 0], volume)
+    with pytest.raises(ValueError, match="nodes"):
+        simulate_tenants(FleetConfig(), nodes[None], rates, volume)
+
+
+def test_ost_shard_partition_rejected(tenants):
+    """The 1-D layout belongs to the single-fleet engine; tenant batches
+    spell ost-only sharding as fleet_shard with mesh_shape=(1, D)."""
+    nodes, rates, volume, _, _ = tenants
+    with pytest.raises(ValueError, match="fleet_shard"):
+        simulate_tenants(FleetConfig(partition="ost_shard"),
+                         nodes, rates, volume)
+
+
+def test_fleet_ost_mesh_shapes():
+    from repro.launch.mesh import fleet_ost_mesh
+    mesh = fleet_ost_mesh()
+    assert mesh.axis_names == ("fleet", "ost")
+    assert mesh.shape["fleet"] == jax.device_count()
+    assert mesh.shape["ost"] == 1
+    with pytest.raises(ValueError, match="devices"):
+        fleet_ost_mesh((jax.device_count() + 1, 2))
+    with pytest.raises(ValueError, match=">= 1"):
+        fleet_ost_mesh((0, 1))
